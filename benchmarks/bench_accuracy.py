@@ -1,0 +1,36 @@
+"""Fig 5/6 — L1 norm vs sequential for every variant (+ Lemma 2 check)."""
+from __future__ import annotations
+
+from benchmarks.common import SCALE_DOWN, csv_row
+from repro.core import (
+    DeviceGraph, EdgeCentricGraph, IdenticalNodePlan, PartitionedGraph,
+    l1_norm, pagerank_barrier, pagerank_barrier_edge, pagerank_barrier_opt,
+    pagerank_identical, pagerank_nosync, pagerank_numpy,
+)
+from repro.graphs import make_dataset
+
+THRESH = 1e-8
+
+
+def main() -> list[str]:
+    rows = []
+    for ds in ("webStanford", "D70"):
+        g = make_dataset(ds, scale_down=SCALE_DOWN)
+        ref, _ = pagerank_numpy(g, threshold=1e-12)
+        dg, eg = DeviceGraph.from_graph(g), EdgeCentricGraph.from_graph(g)
+        pg = PartitionedGraph.from_graph(g, p=56)
+        plan = IdenticalNodePlan.from_graph(g)
+        for vname, r in {
+            "Barrier": pagerank_barrier(dg, threshold=THRESH),
+            "Barrier-Edge": pagerank_barrier_edge(eg, threshold=THRESH),
+            "Barrier-Opt": pagerank_barrier_opt(dg, threshold=THRESH),
+            "Barrier-Identical": pagerank_identical(plan, threshold=THRESH),
+            "NoSync": pagerank_nosync(pg, threshold=THRESH),
+            "NoSync-Opt": pagerank_nosync(pg, threshold=THRESH, perforate=True),
+        }.items():
+            rows.append(csv_row(f"fig5_6/{ds}/{vname}", 0.0, f"l1_norm={l1_norm(r.pr, ref):.3e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

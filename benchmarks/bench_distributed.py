@@ -1,0 +1,65 @@
+"""Stale-sync (No-Sync on TPU) vs barrier: collective traffic & rounds.
+
+Runs in a subprocess with 8 host devices; measures real rounds-to-converge
+and real wall time of the shard_map solvers, and derives the collective-
+bytes-per-solve reduction (the pod-scale win of the paper's idea: exchange
+frequency ÷ local_sweeps at equal fixed point).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import csv_row
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os, json, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from repro.graphs import make_dataset
+    from repro.core import PartitionedGraph, distributed_pagerank, pagerank_numpy, l1_norm
+
+    g = make_dataset("webStanford", scale_down=64)
+    ref, _ = pagerank_numpy(g, threshold=1e-12)
+    pg = PartitionedGraph.from_graph(g, p=8)
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    out = {"n": g.n, "m": g.m}
+    for mode, k in (("barrier", 1), ("stale", 2), ("stale", 4), ("stale", 8)):
+        t0 = time.perf_counter()
+        r = distributed_pagerank(pg, mesh, mode=mode, local_sweeps=k, threshold=1e-7)
+        rounds = int(r.iterations)
+        wall = time.perf_counter() - t0
+        # each round all-gathers the rank vector: bytes = rounds * n_pad * 4
+        coll = rounds * pg.n_pad * 4
+        out[f"{mode}_k{k}"] = {"rounds": rounds, "wall_s": wall,
+                               "coll_bytes": coll, "l1": l1_norm(r.pr, ref)}
+    print(json.dumps(out))
+    """
+)
+
+
+def main() -> list[str]:
+    env = dict(os.environ, PYTHONPATH="src")
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
+                         text=True, env=env, timeout=900)
+    if res.returncode != 0:
+        return [csv_row("dist/ERROR", 0.0, res.stderr.strip()[-200:].replace(",", ";"))]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    rows = []
+    base = out["barrier_k1"]
+    for key in ("barrier_k1", "stale_k2", "stale_k4", "stale_k8"):
+        d = out[key]
+        rows.append(csv_row(
+            f"dist/{key}", d["wall_s"] * 1e6,
+            f"rounds={d['rounds']};coll_bytes={d['coll_bytes']};"
+            f"coll_reduction={base['coll_bytes']/max(d['coll_bytes'],1):.2f}x;l1={d['l1']:.1e}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,44 @@
+"""Fig 8/9 — sleeping and failing workers across coordination disciplines.
+
+Fig 8: execution time vs injected sleep — wait-free stays flat.
+Fig 9: execution time vs number of failed workers — only wait-free finishes.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SCALE_DOWN, csv_row
+from repro.core import FaultPlan, PartitionedGraph, simulate
+from repro.graphs import make_dataset
+
+THRESH = 1e-8
+
+
+def main() -> list[str]:
+    g = make_dataset("webStanford", scale_down=SCALE_DOWN * 4)
+    pg = PartitionedGraph.from_graph(g, p=8)
+    rows = []
+    # Fig 8: sleeps
+    for sleep_s in (0.0, 2.0, 5.0, 10.0):
+        plan = FaultPlan(sleeps={(0, it): sleep_s for it in range(1, 500)})
+        ts = {}
+        for disc in ("barrier", "nosync", "waitfree"):
+            r = simulate(pg, disc, plan, threshold=THRESH)
+            ts[disc] = r.sim_time
+        rows.append(csv_row(
+            f"fig8/sleep{sleep_s:g}", 0.0,
+            f"barrier={ts['barrier']:.0f};nosync={ts['nosync']:.0f};waitfree={ts['waitfree']:.0f}",
+        ))
+    # Fig 9: failures
+    for nfail in (0, 1, 2, 3):
+        plan = FaultPlan(failures={w: 2 for w in range(nfail)})
+        rw = simulate(pg, "waitfree", plan, threshold=THRESH)
+        rb = simulate(pg, "barrier", plan, threshold=THRESH, max_iter=60)
+        rows.append(csv_row(
+            f"fig9/fail{nfail}", 0.0,
+            f"waitfree_time={rw.sim_time:.0f};waitfree_done={rw.iterations < 60};"
+            f"barrier_done={rb.iterations < 60}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

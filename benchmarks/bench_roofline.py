@@ -1,0 +1,35 @@
+"""§Roofline — render the per-(arch × shape) roofline table from the
+dry-run sweep output (dryrun_singlepod.json)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_row
+
+
+def main(path: str = "dryrun_singlepod.json") -> list[str]:
+    if not os.path.exists(path):
+        return [csv_row("roofline/PENDING", 0.0, f"run launch/dryrun.py --all --json {path} first")]
+    with open(path) as f:
+        records = json.load(f)
+    rows = []
+    for r in records:
+        cell = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            rows.append(csv_row(cell, 0.0, "skipped=" + r["reason"][:60].replace(",", ";")))
+            continue
+        if r["status"] != "ok":
+            rows.append(csv_row(cell, 0.0, "FAILED"))
+            continue
+        rows.append(csv_row(
+            cell, r["t_compute_s"] * 1e6,
+            f"t_comp={r['t_compute_s']:.4f};t_mem={r['t_memory_s']:.4f};"
+            f"t_coll={r['t_collective_s']:.4f};dominant={r['dominant']};"
+            f"mfu_proxy={r['model_flops_util']:.3f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,35 @@
+"""Fig 3/4 — speedup vs worker count (web-Stanford & D70 surrogates).
+
+Simulated makespans with per-sweep jitter show the paper's scaling gap:
+the barrier pays max-over-workers every iteration, no-sync doesn't."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE_DOWN, csv_row
+from repro.core import DeviceGraph, PartitionedGraph, pagerank_barrier, pagerank_nosync
+from repro.core.runtime import simulate_jittered
+from repro.graphs import make_dataset
+
+THRESH = 1e-8
+THREADS = [1, 2, 4, 8, 16, 32, 56]
+
+
+def main() -> list[str]:
+    rows = []
+    for ds in ("webStanford", "D70"):
+        g = make_dataset(ds, scale_down=SCALE_DOWN)
+        it_b = int(pagerank_barrier(DeviceGraph.from_graph(g), threshold=THRESH).iterations)
+        for p in THREADS:
+            pg = PartitionedGraph.from_graph(g, p=p)
+            it_n = int(pagerank_nosync(pg, threshold=THRESH).iterations)
+            seq = simulate_jittered(pg, "sequential", iterations=it_b, seed=2)
+            sb = seq / simulate_jittered(pg, "barrier", iterations=it_b, seed=2)
+            sn = seq / simulate_jittered(pg, "nosync", iterations=it_n, seed=2)
+            rows.append(csv_row(f"fig3_4/{ds}/p{p}", 0.0,
+                                f"speedup_barrier={sb:.1f};speedup_nosync={sn:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,72 @@
+"""Fig 1/2 — speedup per parallel variant on standard + synthetic datasets.
+
+Two measurements per (dataset × variant):
+  * real single-device wall time of the jitted solver (CPU; absolute);
+  * simulated 56-worker makespan under the event-driven cost model
+    (repro.core.runtime) with lognormal per-sweep jitter — this is what
+    reproduces the paper's *relative* claims (no-sync > barrier) on a box
+    with one core. Speedup = simulated sequential time / simulated variant
+    makespan.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_DATASETS, SCALE_DOWN, csv_row, time_call
+from repro.core import (
+    DeviceGraph, EdgeCentricGraph, IdenticalNodePlan, PartitionedGraph,
+    l1_norm, pagerank_barrier, pagerank_barrier_edge, pagerank_barrier_opt,
+    pagerank_identical, pagerank_nosync, pagerank_numpy,
+)
+from repro.core.runtime import simulate_jittered
+from repro.graphs import make_dataset
+
+THRESH = 1e-8
+P = 56  # the paper's thread count
+
+
+def variant_rows(name: str) -> list[str]:
+    g = make_dataset(name, scale_down=SCALE_DOWN)
+    ref, it_seq = pagerank_numpy(g, threshold=1e-12)
+    rows = []
+
+    dg = DeviceGraph.from_graph(g)
+    eg = EdgeCentricGraph.from_graph(g)
+    pg = PartitionedGraph.from_graph(g, p=P)
+    plan = IdenticalNodePlan.from_graph(g)
+
+    runs = {
+        "Barrier": lambda: pagerank_barrier(dg, threshold=THRESH),
+        "Barrier-Edge": lambda: pagerank_barrier_edge(eg, threshold=THRESH),
+        "Barrier-Opt": lambda: pagerank_barrier_opt(dg, threshold=THRESH),
+        "Barrier-Identical": lambda: pagerank_identical(plan, threshold=THRESH),
+        "NoSync": lambda: pagerank_nosync(pg, threshold=THRESH),
+        "NoSync-Opt": lambda: pagerank_nosync(pg, threshold=THRESH, perforate=True),
+    }
+    sim_seq = None
+    for vname, fn in runs.items():
+        r = fn()
+        wall = time_call(fn)
+        iters = int(r.iterations)
+        # simulated 56-worker makespan with jitter
+        discipline = "nosync" if vname.startswith("NoSync") else "barrier"
+        sim = simulate_jittered(pg, discipline, iterations=iters, seed=1)
+        if sim_seq is None:
+            sim_seq = simulate_jittered(pg, "sequential", iterations=int(pagerank_barrier(dg, threshold=THRESH).iterations), seed=1)
+        speedup = sim_seq / sim
+        rows.append(csv_row(
+            f"fig1_2/{name}/{vname}", wall * 1e6,
+            f"iters={iters};sim_speedup_vs_seq={speedup:.1f};l1={l1_norm(r.pr, ref):.2e}",
+        ))
+    return rows
+
+
+def main() -> list[str]:
+    rows = []
+    for ds in BENCH_DATASETS:
+        rows += variant_rows(ds)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

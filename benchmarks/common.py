@@ -1,0 +1,33 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def time_call(fn, *args, repeats: int = 3, **kw) -> float:
+    """Median wall time (seconds) of fn(*args) with one warmup."""
+    fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        # block on jax outputs
+        try:
+            import jax
+
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+# Datasets benchmarked in the paper's figures, scaled for the CI box.
+BENCH_DATASETS = ["webStanford", "socEpinions1", "roaditalyosm", "D10", "D70"]
+SCALE_DOWN = 256

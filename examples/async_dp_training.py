@@ -1,0 +1,42 @@
+"""No-Sync data parallelism (the paper's idea at the training layer).
+
+Trains the same tiny LM twice: synchronous DP vs local-SGD with H=4 inner
+steps and int8-compressed outer syncs, and prints the cross-replica traffic
+reduction at matched quality.
+
+    PYTHONPATH=src python examples/async_dp_training.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import DataConfig, SyntheticCorpus
+from repro.training.local_sgd import make_local_sgd_step, replicate_state
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+cfg = dataclasses.replace(get_config("stablelm-3b").reduced(), dtype="float32", n_layers=2, vocab=128)
+data = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8, seed=0))
+opt = AdamWConfig(lr=3e-3, warmup_steps=5)
+n_params = sum(x.size for x in jax.tree.leaves(init_train_state(cfg, jax.random.PRNGKey(0)).params))
+
+# synchronous DP: all-reduce fp32 grads every step
+state = init_train_state(cfg, jax.random.PRNGKey(0))
+step = jax.jit(make_train_step(cfg, opt, moe_dispatch="dense", ce_chunk=32))
+for i, toks in enumerate(data.batches(steps=24)):
+    state, m = step(state, {"tokens": jnp.asarray(toks)})
+print(f"sync DP      final loss {float(m['loss']):.3f}   cross-pod bytes/step {4*n_params}")
+
+# no-sync DP: H local steps per replica, int8 outer deltas + error feedback
+R, H = 2, 4
+ls = replicate_state(init_train_state(cfg, jax.random.PRNGKey(0)), R)
+lstep = jax.jit(make_local_sgd_step(cfg, opt, inner_steps=H, compress=True, moe_dispatch="dense"))
+batches = [jnp.asarray(b) for b in data.batches(steps=R * H * 6)]
+for o in range(6):
+    chunk = jnp.stack(batches[o * R * H:(o + 1) * R * H]).reshape(R, H, *batches[0].shape)
+    ls, m = lstep(ls, {"tokens": chunk})
+print(f"no-sync DP   final loss {float(m['loss']):.3f}   cross-pod bytes/step {n_params//H} "
+      f"({4*H}x less)")

@@ -1,0 +1,35 @@
+"""Distributed stale-synchronous PageRank (the paper's No-Sync on a mesh).
+
+Runs the shard_map solver over 8 simulated devices and compares the
+barrier schedule (one exchange per sweep) with bounded-staleness schedules
+(k local Gauss-Seidel sweeps per exchange) — same fixed point, k× fewer
+collectives. On a real pod, replace the host-device flag with the slice.
+
+    PYTHONPATH=src python examples/pagerank_massive.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import jax
+
+from repro.core import PartitionedGraph, distributed_pagerank, l1_norm, pagerank_numpy
+from repro.graphs import make_dataset
+
+g = make_dataset("socLiveJournal1", scale_down=2048)  # surrogate, ~2.4k vertices
+print(f"graph: n={g.n} m={g.m}; devices={len(jax.devices())}")
+ref, _ = pagerank_numpy(g, threshold=1e-12)
+
+pg = PartitionedGraph.from_graph(g, p=8)
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+
+for mode, k in (("barrier", 1), ("stale", 2), ("stale", 4)):
+    t0 = time.perf_counter()
+    r = distributed_pagerank(pg, mesh, mode=mode, local_sweeps=k, threshold=1e-7)
+    dt = time.perf_counter() - t0
+    print(f"{mode:8s} k={k}: rounds(exchanges)={int(r.iterations):3d} "
+          f"wall={dt:.2f}s L1={l1_norm(r.pr, ref):.2e}")
+print("same fixed point with k× fewer collectives — the paper's non-blocking\n"
+      "insight mapped to pod-scale communication (DESIGN.md §2).")

@@ -1,0 +1,33 @@
+"""Quickstart: non-blocking PageRank on an R-MAT graph in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    DeviceGraph, PartitionedGraph, l1_norm,
+    pagerank_barrier, pagerank_nosync, pagerank_numpy,
+)
+from repro.graphs import rmat_graph
+
+# 1. build a graph (2^12 vertices, power-law degrees — paper's synthetic family)
+g = rmat_graph(scale=12, avg_degree=8, seed=0)
+print(f"graph: {g.n} vertices, {g.m} edges")
+
+# 2. sequential oracle
+ref, it = pagerank_numpy(g, threshold=1e-12)
+print(f"sequential: {it} iterations")
+
+# 3. synchronous (Barrier, Alg 1) — one Jacobi sweep per barrier
+rb = pagerank_barrier(DeviceGraph.from_graph(g), threshold=1e-8)
+print(f"barrier:    {int(rb.iterations)} iterations, L1 vs seq = {l1_norm(rb.pr, ref):.2e}")
+
+# 4. non-blocking (No-Sync, Alg 3) — 56 partitions, fresher in-iteration reads
+pg = PartitionedGraph.from_graph(g, p=56)
+rn = pagerank_nosync(pg, threshold=1e-8)
+print(f"no-sync:    {int(rn.iterations)} iterations, L1 vs seq = {l1_norm(rn.pr, ref):.2e}")
+print("paper claim (Fig 7): no-sync converges in fewer iterations ->",
+      int(rn.iterations) < int(rb.iterations))
+
+top = np.argsort(np.asarray(rn.pr))[::-1][:5]
+print("top-5 vertices:", top.tolist())

@@ -1,0 +1,10 @@
+"""Batched serving example: continuous batching with slot recycling.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:] or ["--arch", "qwen2-vl-2b", "--requests", "6"]))

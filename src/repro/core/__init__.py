@@ -1,0 +1,40 @@
+"""The paper's primary contribution: non-blocking PageRank variants,
+their distributed (shard_map) forms, and the fault-tolerance runtime."""
+from repro.core.pagerank import (
+    DEFAULT_DAMPING,
+    DeviceGraph,
+    EdgeCentricGraph,
+    IdenticalNodePlan,
+    PageRankResult,
+    PartitionedGraph,
+    l1_norm,
+    pagerank_barrier,
+    pagerank_barrier_edge,
+    pagerank_barrier_opt,
+    pagerank_identical,
+    pagerank_nosync,
+    pagerank_numpy,
+)
+from repro.core.distributed import distributed_pagerank
+from repro.core.runtime import FaultPlan, SimResult, SolverCheckpoint, simulate
+
+__all__ = [
+    "DEFAULT_DAMPING",
+    "DeviceGraph",
+    "EdgeCentricGraph",
+    "IdenticalNodePlan",
+    "PageRankResult",
+    "PartitionedGraph",
+    "l1_norm",
+    "pagerank_barrier",
+    "pagerank_barrier_edge",
+    "pagerank_barrier_opt",
+    "pagerank_identical",
+    "pagerank_nosync",
+    "pagerank_numpy",
+    "distributed_pagerank",
+    "FaultPlan",
+    "SimResult",
+    "SolverCheckpoint",
+    "simulate",
+]

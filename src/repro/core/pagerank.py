@@ -1,0 +1,487 @@
+"""PageRank variants from the paper, as jit-able JAX solvers.
+
+Variant map (paper §4 → here):
+
+* ``barrier``        — Alg 1: Jacobi power iteration; the two barrier phases of
+                       the pthread version collapse into the data dependence of
+                       one ``while_loop`` body (prev→new arrays).
+* ``barrier_edge``   — Alg 2: 3-phase edge-centric; phase I is a real scatter of
+                       per-edge contributions through ``offsetList`` into a
+                       contribution list, phase II a gather/segment-sum.
+* ``nosync``         — Alg 3: barrier-free. TPU adaptation: partitions are swept
+                       sequentially *within* an iteration, each reading the
+                       freshest ranks (single pr array, no prev array) — a
+                       deterministic schedule drawn from the set of admissible
+                       async executions (Lemma 2 fixed point is schedule-
+                       independent). Thread-level convergence: a converged
+                       partition skips its sweep.
+* ``*_opt``          — Alg 5 loop perforation: a vertex whose rank moved by
+                       ``0 < |Δ| < threshold·1e-5`` is frozen for the rest of
+                       the run.
+* ``*_identical``    — STIC-D identical-node optimization: vertices with equal
+                       in-neighbour sets share one computation.
+
+All solvers return ``PageRankResult(pr, iterations, err)`` and share the exact
+fixed point of :func:`pagerank_numpy` (the sequential oracle) — the property
+tests assert this (Lemma 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import Graph
+
+DEFAULT_DAMPING = 0.85
+
+
+class PageRankResult(NamedTuple):
+    pr: jax.Array
+    iterations: jax.Array
+    err: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Device-side graph bundles
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DeviceGraph:
+    """dst-sorted COO on device + degree info (vertex-centric variants)."""
+
+    n: int
+    src: jax.Array  # (m,) int32 — sorted by dst
+    dst: jax.Array  # (m,) int32
+    inv_out: jax.Array  # (n,) — 1/outdeg, 0 for dangling (paper drops dangling mass)
+    dangling: jax.Array  # (n,) float mask of outdeg==0 vertices
+
+    @classmethod
+    def from_graph(cls, g: Graph, dtype=jnp.float32) -> "DeviceGraph":
+        out = g.out_degree.astype(np.float64)
+        inv = np.where(out > 0, 1.0 / np.maximum(out, 1), 0.0)
+        return cls(
+            n=g.n,
+            src=jnp.asarray(g.src),
+            dst=jnp.asarray(g.dst),
+            inv_out=jnp.asarray(inv, dtype=dtype),
+            dangling=jnp.asarray((g.out_degree == 0).astype(np.float64), dtype=dtype),
+        )
+
+
+@dataclasses.dataclass
+class EdgeCentricGraph:
+    """Alg-2 layout: out-CSR scatter slots (``offsetList``) + dst order."""
+
+    n: int
+    m: int
+    src_by_src: jax.Array  # (m,) int32 — edges in src-sorted order
+    edge_slot: jax.Array  # (m,) int64 — offsetList: slot in dst-sorted order
+    dst: jax.Array  # (m,) int32 — dst-sorted order (phase II)
+    inv_out: jax.Array
+    dangling: jax.Array
+
+    @classmethod
+    def from_graph(cls, g: Graph, dtype=jnp.float32) -> "EdgeCentricGraph":
+        out_ptr, _, edge_slot = g.out_csr()
+        # src id per edge in src-sorted order
+        src_ids = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(out_ptr))
+        out = g.out_degree.astype(np.float64)
+        inv = np.where(out > 0, 1.0 / np.maximum(out, 1), 0.0)
+        return cls(
+            n=g.n,
+            m=g.m,
+            src_by_src=jnp.asarray(src_ids),
+            edge_slot=jnp.asarray(edge_slot),
+            dst=jnp.asarray(g.dst),
+            inv_out=jnp.asarray(inv, dtype=dtype),
+            dangling=jnp.asarray((g.out_degree == 0).astype(np.float64), dtype=dtype),
+        )
+
+
+@dataclasses.dataclass
+class PartitionedGraph:
+    """Static vertex partitions with padded per-partition edge lists.
+
+    This is the paper's static load allocation (§4.1) made SPMD-friendly:
+    every partition owns ``vp`` contiguous vertices and a fixed-capacity edge
+    buffer (padded), so a ``fori_loop``/``shard_map`` over partitions has
+    static shapes.
+    """
+
+    n: int
+    p: int
+    vp: int  # vertices per partition
+    n_pad: int
+    src_pad: jax.Array  # (p, cap) int32 global src ids (0 where invalid)
+    dst_local: jax.Array  # (p, cap) int32 local dst ids in [0, vp)
+    emask: jax.Array  # (p, cap) dtype — 1 for real edges
+    inv_out: jax.Array  # (n_pad,)
+    dangling: jax.Array  # (n_pad,)
+
+    @classmethod
+    def from_graph(cls, g: Graph, p: int, dtype=jnp.float32) -> "PartitionedGraph":
+        vp = -(-g.n // p)
+        n_pad = vp * p
+        bounds = np.arange(p + 1) * vp
+        e_bounds = np.searchsorted(g.dst, bounds)
+        cap = max(1, int(np.max(np.diff(e_bounds))))
+        src_pad = np.zeros((p, cap), dtype=np.int32)
+        dst_local = np.zeros((p, cap), dtype=np.int32)
+        emask = np.zeros((p, cap), dtype=np.float64)
+        for i in range(p):
+            e0, e1 = e_bounds[i], e_bounds[i + 1]
+            k = e1 - e0
+            src_pad[i, :k] = g.src[e0:e1]
+            dst_local[i, :k] = g.dst[e0:e1] - i * vp
+            emask[i, :k] = 1.0
+        out = np.zeros(n_pad, dtype=np.float64)
+        out[: g.n] = g.out_degree
+        inv = np.where(out > 0, 1.0 / np.maximum(out, 1), 0.0)
+        dang = np.zeros(n_pad, dtype=np.float64)
+        dang[: g.n] = g.out_degree == 0
+        return cls(
+            n=g.n,
+            p=p,
+            vp=vp,
+            n_pad=n_pad,
+            src_pad=jnp.asarray(src_pad),
+            dst_local=jnp.asarray(dst_local),
+            emask=jnp.asarray(emask, dtype=dtype),
+            inv_out=jnp.asarray(inv, dtype=dtype),
+            dangling=jnp.asarray(dang, dtype=dtype),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle (numpy, float64)
+# ---------------------------------------------------------------------------
+
+
+def pagerank_numpy(
+    g: Graph,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-12,
+    max_iter: int = 10_000,
+    handle_dangling: bool = False,
+) -> tuple[np.ndarray, int]:
+    """Sequential Jacobi PageRank — the paper's baseline & Lemma-2 reference."""
+    n = g.n
+    inv_out = np.where(g.out_degree > 0, 1.0 / np.maximum(g.out_degree, 1), 0.0)
+    pr = np.full(n, 1.0 / n)
+    for it in range(1, max_iter + 1):
+        contrib = pr * inv_out
+        acc = np.zeros(n)
+        np.add.at(acc, g.dst, contrib[g.src])
+        new = (1.0 - d) / n + d * acc
+        if handle_dangling:
+            new += d * pr[g.out_degree == 0].sum() / n
+        err = np.abs(new - pr).max()
+        pr = new
+        if err <= threshold:
+            return pr, it
+    return pr, max_iter
+
+
+def l1_norm(pr_a, pr_b) -> float:
+    """Paper Fig 5/6 metric: sum of per-vertex rank differences."""
+    return float(np.abs(np.asarray(pr_a, dtype=np.float64) - np.asarray(pr_b, dtype=np.float64)).sum())
+
+
+# ---------------------------------------------------------------------------
+# Alg 1 — Barrier (Jacobi)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n", "max_iter", "handle_dangling"))
+def _barrier_impl(src, dst, inv_out, dangling, *, n, d, threshold, max_iter, handle_dangling):
+    dtype = inv_out.dtype
+    base = jnp.asarray((1.0 - d) / n, dtype)
+
+    def body(state):
+        pr, it, _ = state
+        contrib = (pr * inv_out)[src]
+        acc = jax.ops.segment_sum(contrib, dst, num_segments=n, indices_are_sorted=True)
+        new = base + d * acc
+        if handle_dangling:
+            new = new + d * jnp.sum(pr * dangling) / n
+        err = jnp.max(jnp.abs(new - pr))
+        return new, it + 1, err
+
+    def cond(state):
+        _, it, err = state
+        return (err > threshold) & (it < max_iter)
+
+    init = (jnp.full((n,), 1.0 / n, dtype), jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, dtype))
+    pr, it, err = jax.lax.while_loop(cond, body, init)
+    return PageRankResult(pr, it, err)
+
+
+def pagerank_barrier(
+    dg: DeviceGraph,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 10_000,
+    handle_dangling: bool = False,
+) -> PageRankResult:
+    return _barrier_impl(
+        dg.src, dg.dst, dg.inv_out, dg.dangling,
+        n=dg.n, d=d, threshold=threshold, max_iter=max_iter,
+        handle_dangling=handle_dangling,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Alg 2 — Barrier-Edge (3-phase, scatter + gather)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "max_iter"))
+def _barrier_edge_impl(src_by_src, edge_slot, dst, inv_out, *, n, m, d, threshold, max_iter):
+    dtype = inv_out.dtype
+    base = jnp.asarray((1.0 - d) / n, dtype)
+
+    def body(state):
+        pr, it, _ = state
+        # Phase I: every vertex scatters its contribution into its out-edges'
+        # slots of the (dst-ordered) contribution list — paper Alg 2 l.9-12.
+        contrib_by_src = (pr * inv_out)[src_by_src]
+        contribution_list = jnp.zeros((m,), dtype).at[edge_slot].set(contrib_by_src)
+        # Phase II: gather per destination — paper Alg 2 l.16-23.
+        acc = jax.ops.segment_sum(contribution_list, dst, num_segments=n, indices_are_sorted=True)
+        new = base + d * acc
+        err = jnp.max(jnp.abs(new - pr))
+        # Phase III (error fold + swap) is the loop-carried state update.
+        return new, it + 1, err
+
+    def cond(state):
+        _, it, err = state
+        return (err > threshold) & (it < max_iter)
+
+    init = (jnp.full((n,), 1.0 / n, dtype), jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, dtype))
+    pr, it, err = jax.lax.while_loop(cond, body, init)
+    return PageRankResult(pr, it, err)
+
+
+def pagerank_barrier_edge(
+    eg: EdgeCentricGraph,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 10_000,
+) -> PageRankResult:
+    return _barrier_edge_impl(
+        eg.src_by_src, eg.edge_slot, eg.dst, eg.inv_out,
+        n=eg.n, m=eg.m, d=d, threshold=threshold, max_iter=max_iter,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Alg 3 — No-Sync (barrier-free; fresh in-iteration reads, single pr array)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "p", "vp", "n_pad", "max_iter", "perforate", "thread_level"),
+)
+def _nosync_impl(
+    src_pad, dst_local, emask, inv_out,
+    *, n, p, vp, n_pad, d, threshold, max_iter, perforate, thread_level,
+):
+    dtype = inv_out.dtype
+    base = jnp.asarray((1.0 - d) / n, dtype)
+    perf_cut = jnp.asarray(threshold * 1e-5, dtype)
+
+    def sweep_partition(i, carry):
+        pr, frozen, perr = carry
+
+        def do(carry):
+            pr, frozen, perr = carry
+            srcs = jax.lax.dynamic_slice_in_dim(src_pad, i, 1, 0)[0]
+            dsts = jax.lax.dynamic_slice_in_dim(dst_local, i, 1, 0)[0]
+            msk = jax.lax.dynamic_slice_in_dim(emask, i, 1, 0)[0]
+            old = jax.lax.dynamic_slice_in_dim(pr, i * vp, vp)
+            contrib = (pr * inv_out)[srcs] * msk
+            acc = jax.ops.segment_sum(contrib, dsts, num_segments=vp, indices_are_sorted=True)
+            new = base + d * acc
+            if perforate:
+                # Alg 5: freeze vertices whose delta is tiny but nonzero.
+                fr = jax.lax.dynamic_slice_in_dim(frozen, i * vp, vp)
+                delta = jnp.abs(new - old)
+                fr_new = fr | ((delta > 0) & (delta < perf_cut))
+                new = jnp.where(fr, old, new)
+                frozen = jax.lax.dynamic_update_slice_in_dim(frozen, fr_new, i * vp, 0)
+            err_i = jnp.max(jnp.abs(new - old))
+            pr = jax.lax.dynamic_update_slice_in_dim(pr, new, i * vp, 0)
+            perr = perr.at[i].set(err_i)
+            return pr, frozen, perr
+
+        # Thread-level convergence (paper Alg 3 l.17-19): a thread exits only
+        # when it OBSERVES every thread's error below threshold — it does NOT
+        # stop sweeping on its own error alone. (Skipping on the local error
+        # freezes partitions whose inputs change later and converges to a
+        # wrong fixed point — found by the hypothesis property tests; it is
+        # the same phenomenon the paper reports for No-Sync-Edge §4.4.)
+        # The observation is the outer while condition (`thread_level` is
+        # termination semantics, not a work-skip); every live iteration
+        # sweeps every partition.
+        return do(carry)
+
+    def body(state):
+        pr, frozen, perr, it = state
+        pr, frozen, perr = jax.lax.fori_loop(0, p, sweep_partition, (pr, frozen, perr))
+        return pr, frozen, perr, it + 1
+
+    def cond(state):
+        _, _, perr, it = state
+        return (jnp.max(perr) > threshold) & (it < max_iter)
+
+    pr0 = jnp.full((n_pad,), 1.0 / n, dtype)
+    frozen0 = jnp.zeros((n_pad,), jnp.bool_)
+    perr0 = jnp.full((p,), jnp.inf, dtype)
+    pr, _, perr, it = jax.lax.while_loop(cond, body, (pr0, frozen0, perr0, jnp.asarray(0, jnp.int32)))
+    return PageRankResult(pr[:n], it, jnp.max(perr))
+
+
+def pagerank_nosync(
+    pg: PartitionedGraph,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 10_000,
+    perforate: bool = False,
+    thread_level: bool = True,
+) -> PageRankResult:
+    return _nosync_impl(
+        pg.src_pad, pg.dst_local, pg.emask, pg.inv_out,
+        n=pg.n, p=pg.p, vp=pg.vp, n_pad=pg.n_pad,
+        d=d, threshold=threshold, max_iter=max_iter,
+        perforate=perforate, thread_level=thread_level,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Alg 5 applied to Barrier — Barrier-Opt (perforated Jacobi)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n", "max_iter"))
+def _barrier_opt_impl(src, dst, inv_out, *, n, d, threshold, max_iter):
+    dtype = inv_out.dtype
+    base = jnp.asarray((1.0 - d) / n, dtype)
+    perf_cut = jnp.asarray(threshold * 1e-5, dtype)
+
+    def body(state):
+        pr, frozen, it, _ = state
+        contrib = (pr * inv_out)[src]
+        acc = jax.ops.segment_sum(contrib, dst, num_segments=n, indices_are_sorted=True)
+        new = base + d * acc
+        delta = jnp.abs(new - pr)
+        frozen_new = frozen | ((delta > 0) & (delta < perf_cut))
+        new = jnp.where(frozen, pr, new)
+        err = jnp.max(jnp.abs(new - pr))
+        return new, frozen_new, it + 1, err
+
+    def cond(state):
+        _, _, it, err = state
+        return (err > threshold) & (it < max_iter)
+
+    init = (
+        jnp.full((n,), 1.0 / n, dtype),
+        jnp.zeros((n,), jnp.bool_),
+        jnp.asarray(0, jnp.int32),
+        jnp.asarray(jnp.inf, dtype),
+    )
+    pr, _, it, err = jax.lax.while_loop(cond, body, init)
+    return PageRankResult(pr, it, err)
+
+
+def pagerank_barrier_opt(
+    dg: DeviceGraph,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 10_000,
+) -> PageRankResult:
+    return _barrier_opt_impl(
+        dg.src, dg.dst, dg.inv_out, n=dg.n, d=d, threshold=threshold, max_iter=max_iter
+    )
+
+
+# ---------------------------------------------------------------------------
+# STIC-D identical-node variants
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class IdenticalNodePlan:
+    """Preprocessing for the *-Identical variants.
+
+    ``rep_of[u]``: representative vertex of u's identical-in-neighbour class.
+    Only edges whose dst is a representative are kept; after each sweep ranks
+    are broadcast from representatives to their class members.
+    """
+
+    n: int
+    n_classes: int
+    cls_of: jax.Array  # (n,) int32 — class id per vertex
+    src: jax.Array  # edges into representatives, dst-sorted
+    dst_class: jax.Array  # class id per kept edge
+    inv_out: jax.Array
+
+    @classmethod
+    def from_graph(cls, g: Graph, dtype=jnp.float32) -> "IdenticalNodePlan":
+        cls_of = g.in_neighbor_classes()
+        n_classes = int(cls_of.max()) + 1 if g.n else 0
+        rep = np.full(n_classes, -1, dtype=np.int64)
+        for u in range(g.n):
+            if rep[cls_of[u]] < 0:
+                rep[cls_of[u]] = u
+        keep = rep[cls_of[g.dst]] == g.dst  # only edges into representatives
+        out = g.out_degree.astype(np.float64)
+        inv = np.where(out > 0, 1.0 / np.maximum(out, 1), 0.0)
+        return cls(
+            n=g.n,
+            n_classes=n_classes,
+            cls_of=jnp.asarray(cls_of.astype(np.int32)),
+            src=jnp.asarray(g.src[keep]),
+            dst_class=jnp.asarray(cls_of[g.dst[keep]].astype(np.int32)),
+            inv_out=jnp.asarray(inv, dtype=dtype),
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "n_classes", "max_iter"))
+def _identical_impl(cls_of, src, dst_class, inv_out, *, n, n_classes, d, threshold, max_iter):
+    dtype = inv_out.dtype
+    base = jnp.asarray((1.0 - d) / n, dtype)
+
+    def body(state):
+        pr, it, _ = state
+        contrib = (pr * inv_out)[src]
+        acc_cls = jax.ops.segment_sum(contrib, dst_class, num_segments=n_classes)
+        new = base + d * acc_cls[cls_of]  # one computation per class, broadcast
+        err = jnp.max(jnp.abs(new - pr))
+        return new, it + 1, err
+
+    def cond(state):
+        _, it, err = state
+        return (err > threshold) & (it < max_iter)
+
+    init = (jnp.full((n,), 1.0 / n, dtype), jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, dtype))
+    pr, it, err = jax.lax.while_loop(cond, body, init)
+    return PageRankResult(pr, it, err)
+
+
+def pagerank_identical(
+    plan: IdenticalNodePlan,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 10_000,
+) -> PageRankResult:
+    return _identical_impl(
+        plan.cls_of, plan.src, plan.dst_class, plan.inv_out,
+        n=plan.n, n_classes=plan.n_classes, d=d, threshold=threshold, max_iter=max_iter,
+    )

@@ -1,0 +1,227 @@
+"""Fault-tolerance runtime: the paper's Wait-Free algorithm at pod scale.
+
+The paper's Alg 6 makes finished threads *help* slow/failed threads by
+adopting their partitions (CAS-arbitrated), so end-to-end time is flat under
+injected sleeps (Fig 8) and thread failures (Fig 9).
+
+A TPU pod has no CAS over HBM of another chip; the deployable equivalents are
+
+* **bounded staleness** — a straggler's partition is *not* waited on; peers
+  keep using its last published ranks (exactly the paper's stale-read
+  semantics), and the straggler catches up on the next exchange;
+* **helping / work adoption** — on a *failure*, the failed worker's partition
+  is re-assigned to survivors (elastic re-shard) and the solve continues from
+  the last published rank vector — no restart from scratch;
+* **checkpoint/restart** — rank vector + round counter snapshots.
+
+This module provides (a) an event-driven simulator of the three coordination
+disciplines under sleep/failure injection — it reproduces Fig 8/9's
+qualitative claims with a deterministic cost model, executing *real* partition
+sweeps with the jitted kernels; (b) `SolverCheckpoint` used by the distributed
+solver driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pagerank import DEFAULT_DAMPING, PartitionedGraph
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Injected perturbations, mirroring the paper's case studies.
+
+    ``sleeps[(worker, iteration)] = seconds`` — worker stalls before that sweep.
+    ``failures[worker] = iteration`` — worker dies permanently at that sweep.
+    """
+
+    sleeps: dict = dataclasses.field(default_factory=dict)
+    failures: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class SimResult:
+    pr: np.ndarray
+    iterations: int
+    sim_time: float  # modelled wall-clock (seconds)
+    work_done: dict  # worker -> number of partition-sweeps executed
+
+
+def _partition_sweep(pg: PartitionedGraph, pr_full: np.ndarray, i: int, d: float) -> tuple[np.ndarray, float]:
+    """One real sweep of partition i (numpy mirror of the jitted kernel)."""
+    vp = pg.vp
+    srcs = np.asarray(pg.src_pad[i])
+    dsts = np.asarray(pg.dst_local[i])
+    msk = np.asarray(pg.emask[i])
+    inv = np.asarray(pg.inv_out)
+    contrib = (pr_full * inv)[srcs] * msk
+    acc = np.zeros(vp)
+    np.add.at(acc, dsts, contrib)
+    new = (1.0 - d) / pg.n + d * acc
+    old = pr_full[i * vp : (i + 1) * vp]
+    err = float(np.max(np.abs(new - old)))
+    return new, err
+
+
+def simulate(
+    pg: PartitionedGraph,
+    discipline: str,
+    plan: Optional[FaultPlan] = None,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 1000,
+    sweep_cost: float = 1.0,
+) -> SimResult:
+    """Event-driven simulation of `barrier` / `nosync` / `waitfree`.
+
+    Time model: each partition sweep costs ``sweep_cost`` (uniform because the
+    partitions are edge-balanced); sleeps add their duration; a failed worker
+    executes nothing after its failure point.
+
+    * barrier  — iteration time = max over live workers (incl. sleep); a failed
+      worker deadlocks the barrier: we model the paper's observation by having
+      its partition never update (time keeps accruing until max_iter).
+    * nosync   — workers proceed independently; global clock = max worker clock
+      at convergence; a failed worker's partition freezes (solve stalls unless
+      others' fixed point tolerates it — it usually does not, matching the
+      paper: No-Sync handles *delays*, not failures).
+    * waitfree — helping: at each round, idle/finished workers adopt partitions
+      of sleeping/failed workers, so every partition is swept every round; the
+      round costs max over *assigned* loads.
+    """
+    plan = plan or FaultPlan()
+    p = pg.p
+    pr = np.full(pg.n_pad, 1.0 / pg.n)
+    perr = np.full(p, np.inf)
+    clocks = np.zeros(p)
+    alive = np.ones(p, dtype=bool)
+    work = {w: 0 for w in range(p)}
+
+    for it in range(1, max_iter + 1):
+        # mark failures at this iteration
+        for w, fit in plan.failures.items():
+            if fit == it:
+                alive[w] = False
+
+        if discipline == "barrier":
+            round_costs = []
+            for w in range(p):
+                if not alive[w]:
+                    continue
+                cost = sweep_cost + plan.sleeps.get((w, it), 0.0)
+                new, perr[w] = _partition_sweep(pg, pr, w, d)
+                pr[w * pg.vp : (w + 1) * pg.vp] = new
+                work[w] += 1
+                round_costs.append(cost)
+            # the barrier makes everyone wait for the slowest
+            t = max(round_costs) if round_costs else sweep_cost
+            clocks[:] = clocks.max() + t
+            if not alive.all():
+                # dead thread holds the barrier: no progress is possible
+                perr[~alive] = np.inf
+        elif discipline == "nosync":
+            for w in range(p):
+                if not alive[w]:
+                    continue
+                if perr[w] <= threshold:  # thread-level convergence
+                    continue
+                clocks[w] += sweep_cost + plan.sleeps.get((w, it), 0.0)
+                new, perr[w] = _partition_sweep(pg, pr, w, d)
+                pr[w * pg.vp : (w + 1) * pg.vp] = new
+                work[w] += 1
+            if not alive.all():
+                perr[~alive] = np.inf  # frozen partition never converges
+        elif discipline == "waitfree":
+            # helping: every partition must be swept this round, but nobody
+            # WAITS on a sleeping/failed worker — partitions are adopted
+            # greedily by the least-loaded worker (sleep counts as that
+            # worker's initial load, so helpers route around it).
+            live = [w for w in range(p) if alive[w]]
+            if not live:
+                break
+            loads = {w: plan.sleeps.get((w, it), 0.0) for w in live}
+            assigned = set()
+            for part in range(p):
+                owner = min(loads, key=loads.get)
+                loads[owner] += sweep_cost
+                assigned.add(owner)
+                new, perr[part] = _partition_sweep(pg, pr, part, d)
+                pr[part * pg.vp : (part + 1) * pg.vp] = new
+                work[owner] += 1
+            # round ends when all partitions are done — idle sleepers don't gate it
+            t = max(loads[w] for w in assigned)
+            clocks[:] = clocks.max() + t
+        else:
+            raise ValueError(discipline)
+
+        live_err = perr[alive] if discipline != "waitfree" else perr
+        if len(live_err) and np.max(live_err) <= threshold and (discipline == "waitfree" or alive.all()):
+            return SimResult(pr[: pg.n], it, float(clocks.max()), work)
+        if discipline == "nosync" and len(live_err) and np.max(live_err) <= threshold:
+            # delays tolerated; failures leave a frozen partition → report stall
+            break
+
+    return SimResult(pr[: pg.n], max_iter, float(clocks.max()), work)
+
+
+def simulate_jittered(
+    pg: PartitionedGraph,
+    discipline: str,
+    iterations: int,
+    seed: int = 0,
+    sigma: float = 0.3,
+) -> float:
+    """Makespan (seconds) of ``iterations`` rounds under lognormal per-sweep
+    jitter — the cost model behind the Fig 1–4 speedup reproduction.
+
+    * sequential — one worker sweeps all p partitions every iteration.
+    * barrier    — round time = max over workers (the barrier waits).
+    * nosync     — each worker's clock advances independently; makespan =
+                   max total per-worker time (no per-round max).
+    * waitfree   — like barrier but load-balanced via helping: round time =
+                   mean over workers (idle helpers absorb the tail).
+    """
+    rng = np.random.default_rng(seed)
+    p = pg.p
+    costs = rng.lognormal(mean=0.0, sigma=sigma, size=(iterations, p))
+    if discipline == "sequential":
+        return float(costs.sum())
+    if discipline == "barrier":
+        return float(costs.max(axis=1).sum())
+    if discipline == "nosync":
+        return float(costs.sum(axis=0).max())
+    if discipline == "waitfree":
+        return float(np.maximum(costs.mean(axis=1), costs.min(axis=1)).sum())
+    raise ValueError(discipline)
+
+
+@dataclasses.dataclass
+class SolverCheckpoint:
+    """Rank-vector checkpoint for restartable distributed solves."""
+
+    pr: np.ndarray
+    round: int
+    n: int
+    p: int
+
+    def save(self, path: str) -> None:
+        np.savez(path, pr=self.pr, round=self.round, n=self.n, p=self.p)
+
+    @classmethod
+    def load(cls, path: str) -> "SolverCheckpoint":
+        z = np.load(path if path.endswith(".npz") else path + ".npz")
+        return cls(pr=z["pr"], round=int(z["round"]), n=int(z["n"]), p=int(z["p"]))
+
+    def reshard(self, new_p: int) -> "SolverCheckpoint":
+        """Elastic re-shard: the rank vector is partition-agnostic, so scaling
+        the worker count only re-chunks it (pad to the new p·vp)."""
+        vp = -(-self.n // new_p)
+        pr = np.full(vp * new_p, 0.0)
+        pr[: self.n] = self.pr[: self.n]
+        return SolverCheckpoint(pr=pr, round=self.round, n=self.n, p=new_p)

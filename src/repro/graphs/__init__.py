@@ -1,0 +1,12 @@
+from repro.graphs.csr import Graph, BlockedCOO, build_blocked_coo
+from repro.graphs.rmat import rmat_graph
+from repro.graphs.datasets import DATASETS, make_dataset
+
+__all__ = [
+    "Graph",
+    "BlockedCOO",
+    "build_blocked_coo",
+    "rmat_graph",
+    "DATASETS",
+    "make_dataset",
+]

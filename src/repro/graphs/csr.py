@@ -1,0 +1,176 @@
+"""Graph containers: CSR (host) and TPU-friendly blocked COO.
+
+The paper (§4) stores graphs in CSR and iterates either vertex-centric
+(in-links per vertex) or edge-centric (explicit contribution list).  On TPU
+the hot path is a gather + segment-sum over edges sorted by destination; the
+Pallas kernel additionally wants a 2-D *blocked* layout (propagation blocking,
+paper ref [17]) so that the rank slice addressed by one tile fits in VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    """Host-side immutable graph in dst-sorted COO + CSR-by-destination.
+
+    ``src``/``dst`` are parallel edge arrays sorted by ``dst`` (then ``src``):
+    this is exactly the order a CSR-of-in-links traversal visits edges, so the
+    vertex-centric paper algorithms map onto contiguous edge ranges.
+    """
+
+    n: int
+    src: np.ndarray  # (m,) int32, sorted by dst
+    dst: np.ndarray  # (m,) int32, non-decreasing
+    out_degree: np.ndarray  # (n,) int32
+    in_ptr: np.ndarray  # (n+1,) int64 CSR indptr over dst
+
+    # CSR by source (out-links) — needed by the edge-centric variants, built lazily.
+    _out_ptr: Optional[np.ndarray] = None
+    _out_dst: Optional[np.ndarray] = None
+    _out_edge_slot: Optional[np.ndarray] = None  # position in dst-sorted order
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+    @classmethod
+    def from_edges(cls, n: int, src: np.ndarray, dst: np.ndarray) -> "Graph":
+        src = np.asarray(src, dtype=np.int32)
+        dst = np.asarray(dst, dtype=np.int32)
+        if src.shape != dst.shape:
+            raise ValueError("src/dst must be parallel arrays")
+        if src.size and (src.min() < 0 or src.max() >= n or dst.min() < 0 or dst.max() >= n):
+            raise ValueError("edge endpoint out of range")
+        order = np.lexsort((src, dst))
+        src, dst = src[order], dst[order]
+        out_degree = np.bincount(src, minlength=n).astype(np.int32)
+        in_ptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(np.bincount(dst, minlength=n), out=in_ptr[1:])
+        return cls(n=n, src=src, dst=dst, out_degree=out_degree, in_ptr=in_ptr)
+
+    def out_csr(self):
+        """CSR over out-links: (out_ptr, out_dst, edge_slot).
+
+        ``edge_slot[j]`` gives, for the j-th edge in src-sorted order, its
+        index in the canonical dst-sorted order — this is the paper's
+        ``offsetList`` (Alg 2 line 11): where a vertex writes its contribution
+        so that the destination's in-link scan finds it contiguously.
+        """
+        if self._out_ptr is None:
+            order = np.lexsort((self.dst, self.src))
+            self._out_dst = self.dst[order]
+            self._out_edge_slot = order.astype(np.int64)
+            out_ptr = np.zeros(self.n + 1, dtype=np.int64)
+            np.cumsum(np.bincount(self.src, minlength=self.n), out=out_ptr[1:])
+            self._out_ptr = out_ptr
+        return self._out_ptr, self._out_dst, self._out_edge_slot
+
+    def in_neighbor_classes(self) -> np.ndarray:
+        """STIC-D 'identical nodes': class id per vertex; vertices with the
+        same in-neighbor set share a class (identical PageRank)."""
+        keys = {}
+        cls_of = np.empty(self.n, dtype=np.int64)
+        for u in range(self.n):
+            lo, hi = self.in_ptr[u], self.in_ptr[u + 1]
+            key = self.src[lo:hi].tobytes()
+            cls_of[u] = keys.setdefault(key, len(keys))
+        return cls_of
+
+    def partition_ranges(self, p: int, edge_balanced: bool = True) -> np.ndarray:
+        """(p+1,) vertex boundaries. Paper uses static equal-vertex partitions;
+        we default to edge-balanced boundaries (fixes their load-skew issue)."""
+        if not edge_balanced:
+            return np.linspace(0, self.n, p + 1).round().astype(np.int64)
+        targets = np.linspace(0, self.m, p + 1)
+        bounds = np.searchsorted(self.in_ptr, targets, side="left")
+        bounds[0], bounds[-1] = 0, self.n
+        return np.maximum.accumulate(bounds).astype(np.int64)
+
+
+@dataclasses.dataclass
+class BlockedCOO:
+    """2-D edge blocking for the Pallas SpMV kernel.
+
+    Edges are bucketed by (dst_block, src_block) and each bucket is split into
+    fixed-capacity tiles.  A tile stores local (within-block) src/dst indices
+    so the kernel only addresses one VMEM-resident slice of the rank vector
+    and one dst-block accumulator.  Invalid (padding) lanes point at slot 0
+    with weight 0.
+    """
+
+    n: int
+    block: int  # vertices per block (both axes)
+    n_blocks: int
+    tiles_src_local: np.ndarray  # (T, cap) int32
+    tiles_dst_local: np.ndarray  # (T, cap) int32
+    tiles_valid: np.ndarray  # (T, cap) float32 {0,1}
+    tile_src_block: np.ndarray  # (T,) int32
+    tile_dst_block: np.ndarray  # (T,) int32
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.tiles_src_local.shape[0])
+
+
+def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> BlockedCOO:
+    n_blocks = -(-g.n // block)
+    sb = g.src // block
+    db = g.dst // block
+    bucket = db.astype(np.int64) * n_blocks + sb
+    order = np.argsort(bucket, kind="stable")
+    src_s, dst_s, bucket_s = g.src[order], g.dst[order], bucket[order]
+
+    tiles_src, tiles_dst, tiles_val, t_sb, t_db = [], [], [], [], []
+    starts = np.flatnonzero(np.r_[True, bucket_s[1:] != bucket_s[:-1]])
+    ends = np.r_[starts[1:], bucket_s.size]
+    for s, e in zip(starts, ends):
+        b = bucket_s[s]
+        dblk, sblk = divmod(int(b), n_blocks)
+        for ts in range(s, e, tile_cap):
+            te = min(ts + tile_cap, e)
+            k = te - ts
+            sl = np.zeros(tile_cap, dtype=np.int32)
+            dl = np.zeros(tile_cap, dtype=np.int32)
+            vl = np.zeros(tile_cap, dtype=np.float32)
+            sl[:k] = src_s[ts:te] - sblk * block
+            dl[:k] = dst_s[ts:te] - dblk * block
+            vl[:k] = 1.0
+            tiles_src.append(sl)
+            tiles_dst.append(dl)
+            tiles_val.append(vl)
+            t_sb.append(sblk)
+            t_db.append(dblk)
+
+    # Every dst block needs >=1 tile so the kernel initializes its output run.
+    covered = set(t_db)
+    for dblk in range(n_blocks):
+        if dblk not in covered:
+            tiles_src.append(np.zeros(tile_cap, np.int32))
+            tiles_dst.append(np.zeros(tile_cap, np.int32))
+            tiles_val.append(np.zeros(tile_cap, np.float32))
+            t_sb.append(0)
+            t_db.append(dblk)
+
+    # kernel contract: tiles sorted by dst_block (contiguous output runs)
+    order2 = np.argsort(np.asarray(t_db), kind="stable")
+    tiles_src = [tiles_src[i] for i in order2]
+    tiles_dst = [tiles_dst[i] for i in order2]
+    tiles_val = [tiles_val[i] for i in order2]
+    t_sb = [t_sb[i] for i in order2]
+    t_db = [t_db[i] for i in order2]
+
+    return BlockedCOO(
+        n=g.n,
+        block=block,
+        n_blocks=n_blocks,
+        tiles_src_local=np.stack(tiles_src),
+        tiles_dst_local=np.stack(tiles_dst),
+        tiles_valid=np.stack(tiles_val),
+        tile_src_block=np.asarray(t_sb, dtype=np.int32),
+        tile_dst_block=np.asarray(t_db, dtype=np.int32),
+    )

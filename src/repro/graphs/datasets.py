@@ -1,0 +1,74 @@
+"""Dataset registry mirroring the paper's Table 1.
+
+Real SNAP downloads are not available offline, so each real-world dataset is
+modelled by an R-MAT / lattice surrogate with the same vertex/edge counts
+(scaled by ``scale_down`` for CI-sized runs).  Web/social graphs use skewed
+R-MAT parameters; road networks use near-uniform ones (they are close to
+planar lattices with tiny skew).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.graphs.csr import Graph
+from repro.graphs.rmat import rmat_edges
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    n_vertices: int
+    n_edges: int
+    family: str  # web | social | road | synthetic
+
+
+DATASETS = {
+    # Web graphs [20]
+    "webStanford": DatasetSpec("webStanford", 281_903, 2_312_497, "web"),
+    "webNotreDame": DatasetSpec("webNotreDame", 325_729, 1_497_134, "web"),
+    "webBerkStan": DatasetSpec("webBerkStan", 685_230, 7_600_595, "web"),
+    "webGoogle": DatasetSpec("webGoogle", 875_713, 5_105_039, "web"),
+    # Social networks [23]
+    "socEpinions1": DatasetSpec("socEpinions1", 75_879, 508_837, "social"),
+    "Slashdot0811": DatasetSpec("Slashdot0811", 77_360, 905_468, "social"),
+    "Slashdot0902": DatasetSpec("Slashdot0902", 82_168, 948_464, "social"),
+    "socLiveJournal1": DatasetSpec("socLiveJournal1", 4_847_571, 68_993_773, "social"),
+    # Road networks [23]
+    "roaditalyosm": DatasetSpec("roaditalyosm", 6_686_493, 7_013_978, "road"),
+    "greatbritainosm": DatasetSpec("greatbritainosm", 7_700_000, 8_200_000, "road"),
+    "asiaosm": DatasetSpec("asiaosm", 12_000_000, 12_700_000, "road"),
+    "germanyosm": DatasetSpec("germanyosm", 11_500_000, 12_400_000, "road"),
+    # Synthetic D10..D70 [22]
+    "D10": DatasetSpec("D10", 491_550, 999_999, "synthetic"),
+    "D20": DatasetSpec("D20", 954_225, 1_999_999, "synthetic"),
+    "D30": DatasetSpec("D30", 1_400_539, 2_999_999, "synthetic"),
+    "D40": DatasetSpec("D40", 1_871_477, 3_999_999, "synthetic"),
+    "D50": DatasetSpec("D50", 2_303_074, 4_999_999, "synthetic"),
+    "D60": DatasetSpec("D60", 2_759_417, 5_999_999, "synthetic"),
+    "D70": DatasetSpec("D70", 3_222_209, 6_999_999, "synthetic"),
+}
+
+
+def make_dataset(name: str, scale_down: float = 1.0, seed: int = 0) -> Graph:
+    """Instantiate a surrogate graph for a Table-1 dataset.
+
+    ``scale_down`` divides both vertex and edge counts (CI uses e.g. 64).
+    """
+    spec = DATASETS[name]
+    n = max(64, int(spec.n_vertices / scale_down))
+    m = max(128, int(spec.n_edges / scale_down))
+    scale = max(6, math.ceil(math.log2(n)))
+    if spec.family == "road":
+        a, b, c = 0.30, 0.25, 0.25  # near-uniform, low skew
+    elif spec.family == "web":
+        a, b, c = 0.60, 0.19, 0.19
+    else:
+        a, b, c = 0.57, 0.19, 0.19
+    src, dst = rmat_edges(scale, m, a=a, b=b, c=c, seed=seed)
+    # fold down to exactly n vertices
+    src = (src % n).astype(np.int32)
+    dst = (dst % n).astype(np.int32)
+    return Graph.from_edges(n, src, dst)

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention_kernel", "flash_attention", "attention_ref"]

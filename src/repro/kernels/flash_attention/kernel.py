@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: tiled (flash) attention for LM prefill.
+
+Canonical online-softmax tiling for the MXU/VMEM hierarchy:
+
+* grid ``(batch, q_heads, num_q_blocks, num_k_blocks)`` — the k dimension is
+  the innermost (fastest) axis; running max/denominator/accumulator live in
+  VMEM scratch and persist across the k sweep of one q block.
+* BlockSpecs keep one (block_q × head_dim) query tile, one (block_k ×
+  head_dim) key/value tile and the accumulator in VMEM; HBM traffic is
+  O(S²/block) instead of O(S²).
+* GQA is folded into the index map (kv head = q head // group), so no
+  repeated-KV materialization.
+* ``window`` implements sliding-window attention (mixtral/starcoder2);
+  fully-masked tiles are skipped via ``pl.when`` (the dominant saving of SWA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int | None, block_q: int, block_k: int, num_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # tile-level mask culling: skip tiles that are entirely out of range
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window is not None:
+        # newest key this tile offers vs oldest query in the q tile's window
+        live = live & (k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_kernel(
+    q: jax.Array,  # (b, hq, sq, dh)
+    k: jax.Array,  # (b, hkv, sk, dh)
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    if sq % block_q or sk % block_k:
+        raise ValueError("seq lengths must be multiples of the block sizes")
+    group = hq // hkv
+    nq, nk = sq // block_q, sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

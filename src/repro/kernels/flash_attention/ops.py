@@ -1,0 +1,39 @@
+"""Public attention op: Pallas flash kernel with jnp fallback & padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_kernel: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Attention entry point used by the model stack.
+
+    ``use_kernel=False`` (or a non-TPU backend without ``interpret``) routes
+    to the jnp reference — XLA fuses it acceptably and it is what the dry-run
+    lowers (the Pallas kernel is exercised in interpret-mode tests and on
+    real TPUs).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    sq, sk = q.shape[2], k.shape[2]
+    if use_kernel and sq % block_q == 0 and sk % block_k == 0 and sq >= block_q and sk >= block_k:
+        return flash_attention_kernel(
+            q, k, v, scale=scale, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, interpret=interpret,
+        )
+    return attention_ref(q, k, v, scale=scale, causal=causal, window=window)

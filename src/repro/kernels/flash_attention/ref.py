@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (b, hq, sq, dh)
+    k: jax.Array,  # (b, hkv, sk, dh)
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    b, hq, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,224 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and report memory / cost / collective analyses.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--json out.json]
+
+The XLA_FLAGS lines below MUST run before any jax import (device count locks
+on first backend init); this module is the only place it is set.
+
+Cost-accounting methodology (calibrated two-compile):
+XLA's cost_analysis counts a While (scan) body ONCE, so a depth-L layer
+scan under-reports FLOPs/bytes/collective-bytes by ~L×. Per cell we compile
+
+  A — the production program (layer stack scanned; memory_analysis of A is
+      the real deployment schedule), and
+  B — a depth-2 calibration config with the layer scan fully unrolled.
+
+With per-layer cost b and non-loop cost c:  A = c + b,  B = c + 2·b, so
+b = B − A,  c = 2A − B,  corrected = c + L·b.  Inner q-chunk attention scans
+are always fully unrolled (≤64 bodies) so b itself is exact; the only loops
+left inside a body are SSM time recurrences (FLOP-negligible; their HBM
+traffic is corrected analytically — see utils/flops.py).
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cell_runnable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell, count_params
+from repro.utils.hlo import collective_bytes
+from repro.utils.roofline import Roofline, model_flops_decode, model_flops_train
+
+
+def calib_config(cfg, bodies: int = 2):
+    """Variant of cfg with ``bodies`` scan bodies, for cost calibration."""
+    changes = {"n_layers": bodies}
+    if cfg.hybrid_attn_every:
+        changes["n_layers"] = bodies * cfg.hybrid_attn_every  # groups
+    if cfg.encoder:
+        changes["encoder"] = dataclasses.replace(cfg.encoder, n_layers=bodies)
+    return dataclasses.replace(cfg, **changes)
+
+
+def n_bodies(cfg) -> int:
+    """Number of layer-scan bodies in the production config."""
+    if cfg.hybrid_attn_every:
+        return cfg.n_layers // cfg.hybrid_attn_every
+    return cfg.n_layers
+
+
+def _compile(cfg, shape, mesh, *, layer_unroll):
+    step, args, in_sh, meta = build_cell(cfg, shape, mesh, layer_unroll=layer_unroll)
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_sh).lower(*args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "compiled": compiled,
+        "meta": meta,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll.get("total", 0)),
+        "coll_detail": coll,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_runnable(cfg, shape)
+    if not ok:
+        if verbose:
+            print(f"--- {arch} × {shape_name}: SKIPPED ({why})")
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(mesh.devices.size)
+
+    # A: production program (memory analysis & the artifact that must compile)
+    t0 = time.time()
+    A = _compile(cfg, shape, mesh, layer_unroll=False)
+    tA = time.time() - t0
+
+    if multi_pod:
+        # the multi-pod pass proves the "pod" axis shards; the roofline table
+        # is single-pod only (see EXPERIMENTS.md §Dry-run) — skip calibration.
+        mem = A["compiled"].memory_analysis()
+        return {
+            "arch": arch, "shape": shape_name, "status": "ok", "mesh": "2x16x16",
+            "kind": A["meta"]["kind"], "chips": chips, "compile_A_s": round(tA, 1),
+            "flops_raw_A": A["flops"],
+            "collective_detail_A": A["coll_detail"],
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+        }
+
+    # B2/B4: unrolled shallow calibration compiles — unrolled cost_analysis is
+    # exactly linear in depth (verified), so two points give slope+intercept.
+    t0 = time.time()
+    B2 = _compile(calib_config(cfg, 2), shape, mesh, layer_unroll=True)
+    B4 = _compile(calib_config(cfg, 4), shape, mesh, layer_unroll=True)
+    tB = time.time() - t0
+
+    L = n_bodies(cfg)
+    corr = {}
+    for key in ("flops", "bytes", "coll"):
+        body = max((B4[key] - B2[key]) / 2.0, 0.0)
+        nonloop = max(B2[key] - 2.0 * body, 0.0)
+        corr[key] = nonloop + L * body
+
+    mem = A["compiled"].memory_analysis()
+    roof = Roofline(flops=corr["flops"], bytes_accessed=corr["bytes"],
+                    collective_bytes=corr["coll"], chips=chips)
+
+    total_p, active_p = count_params(cfg)
+    tokens = A["meta"]["tokens"]
+    kind = A["meta"]["kind"]
+    mf = model_flops_train(active_p, tokens) if kind == "train" else model_flops_decode(active_p, tokens)
+    # cost_analysis of the SPMD module is per-device; scale model flops too
+    mf_per_device = mf / chips
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "status": "ok",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind,
+        "chips": chips,
+        "compile_A_s": round(tA, 1),
+        "compile_B_s": round(tB, 1),
+        "coll_detail_B4": B4["coll_detail"],
+        "flops_raw_A": A["flops"],
+        "flops_corrected": corr["flops"],
+        "bytes_corrected": corr["bytes"],
+        "collective_bytes_corrected": corr["coll"],
+        "collective_detail_A": A["coll_detail"],
+        "params_total": total_p,
+        "params_active": active_p,
+        "model_flops_per_device": mf_per_device,
+        "model_flops_util": mf_per_device / max(corr["flops"], 1.0),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+        "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+        **_roofline_row(roof),
+    }
+    if verbose:
+        print(f"--- {arch} × {shape_name} [{rec['mesh']}] ---")
+        print(f"  compile A {tA:.1f}s / B {tB:.1f}s; L={L} bodies")
+        print(f"  memory(A): args={rec['argument_bytes_per_device']} temp={rec['temp_bytes_per_device']}")
+        print(f"  corrected: flops={corr['flops']:.3e} bytes={corr['bytes']:.3e} coll={corr['coll']:.3e}")
+        print(f"  roofline: compute={roof.t_compute:.4f}s memory={roof.t_memory:.4f}s "
+              f"collective={roof.t_collective:.4f}s dominant={roof.dominant}")
+        print(f"  model_flops_util={rec['model_flops_util']:.3f}")
+    return rec
+
+
+def _roofline_row(roof: Roofline) -> dict:
+    # per-device accounting: cost_analysis is for one SPMD partition
+    return {
+        "t_compute_s": roof.flops / 197e12,
+        "t_memory_s": roof.bytes_accessed / 819e9,
+        "t_collective_s": roof.collective_bytes / 50e9,
+        "dominant": roof.dominant,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    records = []
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp)
+            except Exception as e:  # a failure here is a sharding bug
+                failures += 1
+                rec = {"arch": arch, "shape": shape, "mesh": "2x16x16" if mp else "16x16",
+                       "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                print(f"--- {arch} × {shape} FAILED: {rec['error']}", file=sys.stderr)
+            records.append(rec)
+            sys.stdout.flush()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped (documented), {failures} failed ==")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,190 @@
+"""Abstract input specs + shardings for every (arch × shape) dry-run cell.
+
+``build_cell(cfg, shape, mesh)`` returns (step_fn, abstract_args,
+in_shardings, out_shardings, meta) such that::
+
+    jax.jit(step_fn, in_shardings=…, out_shardings=…).lower(*abstract_args)
+
+compiles the exact production computation with zero real allocation
+(every abstract arg is a ShapeDtypeStruct).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, forward, init_cache, init_params
+from repro.serving.engine import make_serve_step
+from repro.sharding.rules import batch_spec, param_specs
+from repro.training.train_step import TrainState, init_train_state, make_train_step
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _bspec(mesh: Mesh, *rest) -> P:
+    axes = _batch_axes(mesh)
+    return P(axes if len(axes) > 1 else axes[0], *rest)
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    return jax.eval_shape(lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def state_specs(cfg: ModelConfig, state: TrainState, mesh: Mesh) -> TrainState:
+    pspecs = param_specs(state.params, mesh)
+    return TrainState(
+        params=pspecs,
+        opt=type(state.opt)(
+            m=param_specs(state.opt.m, mesh),
+            v=param_specs(state.opt.v, mesh),
+            step=P(),
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# cache sharding rules
+# ---------------------------------------------------------------------------
+
+
+def _cache_spec_for(path: str, shape: tuple, mesh: Mesh, batch_shardable: bool) -> P:
+    """KV/SSM cache sharding. If the batch is too small for the data axes
+    (long_500k, B=1), shard the cache TIME dim over 'data' instead
+    (sequence-sharded decode) and leave batch replicated. All axes are
+    dropped per-dim when they don't divide (finalize_spec)."""
+    from repro.sharding.rules import finalize_spec
+
+    axes = _batch_axes(mesh)
+    b = axes if len(axes) > 1 else axes[0]
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in ("k", "v") or "cross" in path:  # (…,B,Hk,T,dh) / (L,B,H,Tenc,dh)
+        trailing = (b, "model", None, None) if batch_shardable else (None, "model", "data", None)
+        return finalize_spec(trailing, shape, mesh)
+    if leaf in ("ckv", "kr"):  # (…,B,T,R)
+        trailing = (b, None, None) if batch_shardable else (None, "data", None)
+        return finalize_spec(trailing, shape, mesh)
+    if leaf == "conv":  # (…,B,k,di)
+        return finalize_spec((b if batch_shardable else None, None, "model"), shape, mesh)
+    if leaf == "h":  # (…,B,di,st) or (…,B,nh,hd,st)
+        trailing = (b if batch_shardable else None, "model", None)
+        if len(shape) >= 5:  # mamba2 multihead state (…,B,nh,hd,st)
+            trailing = (b if batch_shardable else None, "model", None, None)
+        return finalize_spec(trailing, shape, mesh)
+    return P()
+
+
+def cache_specs(cache, mesh: Mesh, batch_shardable: bool):
+    from repro.sharding.rules import _path_str
+
+    def spec(path, x):
+        return _cache_spec_for(_path_str(path), tuple(getattr(x, "shape", ())), mesh, batch_shardable)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+# ---------------------------------------------------------------------------
+# cell builders
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract model inputs for this cell (tokens + stubbed modality)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        specs = {"tokens": _sds((b, 1), jnp.int32)}
+    else:
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.encoder:
+        specs["frames"] = _sds((b, cfg.encoder.n_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *, moe_dispatch: str = "sparse", layer_unroll: bool = False):
+    """→ (step_fn, args_abstract, in_shardings, meta)."""
+    ns = lambda spec: jax.tree.map(lambda s: NamedSharding(mesh, s), spec)
+    binputs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        state = abstract_train_state(cfg)
+        sspec = state_specs(cfg, state, mesh)
+        step = make_train_step(cfg, moe_dispatch=moe_dispatch, ce_chunk=512, layer_unroll=layer_unroll)
+        batch_sh = {k: NamedSharding(mesh, _bspec(mesh, *([None] * (len(v.shape) - 1)))) for k, v in binputs.items()}
+        in_sh = (ns(sspec), batch_sh)
+        args = (state, binputs)
+        meta = {"kind": "train", "tokens": shape.global_batch * shape.seq_len}
+        return step, args, in_sh, meta
+
+    params = abstract_params(cfg)
+    pspec = param_specs(params, mesh)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            kw = {"frames": batch["frames"]} if cfg.encoder else {}
+            return forward(cfg, params, batch["tokens"], moe_dispatch=moe_dispatch,
+                           layer_unroll=layer_unroll, features_only=True, **kw)
+
+        batch_sh = {k: NamedSharding(mesh, _bspec(mesh, *([None] * (len(v.shape) - 1)))) for k, v in binputs.items()}
+        in_sh = (ns(pspec), batch_sh)
+        args = (params, binputs)
+        meta = {"kind": "prefill", "tokens": shape.global_batch * shape.seq_len}
+        return prefill_step, args, in_sh, meta
+
+    # decode
+    n_data = int(np.prod([mesh.shape[a] for a in _batch_axes(mesh)]))
+    batch_shardable = shape.global_batch >= n_data
+    cache = jax.eval_shape(lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    if cfg.encoder:
+        # §Perf H5: cross-attention K/V lives in the cache (filled once per
+        # request by init_cross_cache), not re-projected every step.
+        from repro.models.model import init_cross_cache
+
+        enc_sds = _sds((shape.global_batch, cfg.encoder.n_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+        cross = jax.eval_shape(lambda p, e: init_cross_cache(cfg, p, e), params, enc_sds)
+        cache = dict(cache, cross=cross)
+    cspec = cache_specs(cache, mesh, batch_shardable)
+    serve = make_serve_step(cfg, layer_unroll=layer_unroll)
+
+    tok_sh = NamedSharding(mesh, _bspec(mesh, None) if batch_shardable else P())
+    args = [params, binputs["tokens"], cache]
+    in_sh = [ns(pspec), tok_sh, ns(cspec)]
+    meta = {"kind": "decode", "tokens": shape.global_batch}
+    return serve, tuple(args), tuple(in_sh), meta
+
+
+# ---------------------------------------------------------------------------
+# model-FLOPs accounting (6·N·D / 2·N·D with MoE-active N)
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig) -> tuple[float, float]:
+    """(total, active) parameter counts from abstract shapes."""
+    params = abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    total = 0.0
+    active = 0.0
+    for path, leaf in flat:
+        keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        n = float(np.prod(leaf.shape))
+        total += n
+        if cfg.moe and keys.endswith(("mlp/wi", "mlp/wg", "mlp/wo")) and leaf.ndim >= 4:
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    return total, active

@@ -1,0 +1,389 @@
+"""Attention flavours for the assigned architectures.
+
+* GQA (everything except deepseek/falcon) with optional sliding window,
+  logit softcap (gemma2) and M-RoPE (qwen2-vl).
+* MLA (deepseek-v2): low-rank compressed Q/KV; the decode cache stores the
+  512-dim compressed KV + shared rope key only.
+* Cross attention (whisper decoder).
+
+All flavours expose ``init`` / ``apply`` (training, full sequence) and
+``decode`` (single step with cache).  ``apply`` routes to the Pallas flash
+kernel when shapes allow and ``use_kernel`` is set; default path is the jnp
+reference which XLA/SPMD partitions (the kernel is validated in interpret
+mode and targets real TPUs).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.common import dense_init, softcap
+from repro.sharding.rules import constrain
+from repro.models.rope import apply_mrope, apply_rope
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(rng, cfg: ModelConfig, dtype):
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], d, (h, dh), dtype),
+        "wk": dense_init(ks[1], d, (hk, dh), dtype),
+        "wv": dense_init(ks[2], d, (hk, dh), dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+
+
+def _rope(cfg: ModelConfig, x, positions):
+    if positions is None or not cfg.rope_enabled:
+        return x
+    if cfg.mrope and positions.ndim == 3:
+        return apply_mrope(x, positions, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def gqa_apply(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, D)
+    positions: Optional[jax.Array],
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = constrain(jnp.einsum("bsd,dhk->bhsk", x, params["wq"]), "batch", "model", None, None)
+    k = constrain(jnp.einsum("bsd,dhk->bhsk", x, params["wk"]), "batch", "model", None, None)
+    v = constrain(jnp.einsum("bsd,dhk->bhsk", x, params["wv"]), "batch", "model", None, None)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    scale = dh**-0.5
+    if cfg.attn_softcap is None and use_kernel:
+        o = flash_attention(q, k, v, scale=scale, causal=causal, window=window, interpret=interpret)
+    else:
+        o = _softcap_attention(cfg, q, k, v, scale, causal, window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bsf,fd->bsd", o, params["wo"])
+
+
+CHUNK_Q_THRESHOLD = 4096  # q-chunk the score matrix at/above this seq len
+CHUNK_Q = 1024
+CHUNK_UNROLL_MAX = 64  # fully unroll the q-chunk scan up to this many chunks
+
+
+def _softcap_attention(cfg, q, k, v, scale, causal, window):
+    """Masked attention with optional soft-cap and (traced) window.
+
+    For seq >= CHUNK_Q_THRESHOLD the (S,S) score matrix is computed in
+    q-chunks (full-k softmax per chunk — exact, no online accumulation),
+    bounding live memory to (B,H,cq,S). Up to CHUNK_UNROLL_MAX chunks the
+    scan is fully unrolled so cost_analysis counts every chunk (roofline
+    fidelity); beyond that it loops and EXPERIMENTS.md applies the
+    documented analytic correction (utils/flops.py).
+    """
+    sq = q.shape[2]
+    if sq >= CHUNK_Q_THRESHOLD and sq % CHUNK_Q == 0:
+        return _chunked_attention(cfg, q, k, v, scale, causal, window)
+    return _full_attention(cfg, q, k, v, scale, causal, window)
+
+
+def _full_attention(cfg, q, k, v, scale, causal, window):
+    group = q.shape[1] // k.shape[1]
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s_ = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+    s_ = softcap(s_, cfg.attn_softcap)
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s_ = jnp.where(mask, s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(q.dtype)
+
+
+def _chunked_attention(cfg, q, k, v, scale, causal, window):
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    group = h // k.shape[1]
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    nq = sq // CHUNK_Q
+    qc = q.reshape(b, h, nq, CHUNK_Q, dh).transpose(2, 0, 1, 3, 4)  # (nq,B,H,cq,dh)
+    kpos = jnp.arange(sk)[None, :]
+
+    def body(_, inp):
+        qi, idx = inp  # (B,H,cq,dh), scalar chunk index
+        s_ = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+        s_ = softcap(s_, cfg.attn_softcap)
+        qpos = idx * CHUNK_Q + jnp.arange(CHUNK_Q)[:, None]
+        mask = jnp.ones((CHUNK_Q, sk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s_ = jnp.where(mask, s_, -1e30)
+        p = jax.nn.softmax(s_, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(q.dtype)
+        return None, o
+
+    unroll = nq if nq <= CHUNK_UNROLL_MAX else 1
+    _, oc = jax.lax.scan(body, None, (qc, jnp.arange(nq)), unroll=unroll)
+    return oc.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, dh)
+
+
+def gqa_decode(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, 1, D)
+    cache: dict,  # {"k": (B,Hk,T,dh), "v": ..., "pos": (B,) int32}
+    *,
+    window: Optional[int] = None,
+):
+    """One decode step. The cache is a ring buffer of size T (max context);
+    for SWA archs T = window, the deployable memory win of sliding attention."""
+    b = x.shape[0]
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    t = cache["k"].shape[2]
+    pos = cache["pos"]  # (B,) current absolute position
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"])
+    q = _rope(cfg, q, _decode_positions(cfg, pos))
+    k = _rope(cfg, k, _decode_positions(cfg, pos))
+    kc = _ring_write(cache["k"], k, pos)
+    vc = _ring_write(cache["v"], v, pos)
+    # attention over the cache
+    group = h // hk
+    kx = jnp.repeat(kc, group, axis=1)
+    vx = jnp.repeat(vc, group, axis=1)
+    s_ = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)) * dh**-0.5
+    s_ = softcap(s_, cfg.attn_softcap)
+    # valid = slots already written (ring semantics)
+    abs_pos = _slot_abs_pos(pos, t)  # (B,T) absolute token position per slot
+    valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+    if window is not None:
+        valid &= (pos[:, None] - abs_pos) < window
+    s_ = jnp.where(valid[:, None, None, :], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+    out = jnp.einsum("bsf,fd->bsd", o, params["wo"])
+    return out, {"k": kc, "v": vc, "pos": pos + 1}
+
+
+def _decode_positions(cfg: ModelConfig, pos):
+    p = pos[:, None]  # (B,1)
+    if cfg.mrope:
+        return jnp.broadcast_to(p[:, None, :], (p.shape[0], 3, 1))
+    return p
+
+
+def _ring_write(cache, new, pos):
+    """cache (B,Hk,T,dh); new (B,Hk,1,dh); write at slot pos%T per batch row."""
+    t = cache.shape[2]
+    slot = pos % t  # (B,)
+    oh = jax.nn.one_hot(slot, t, dtype=cache.dtype)  # (B,T)
+    return cache * (1 - oh[:, None, :, None]) + new * oh[:, None, :, None]
+
+
+def _slot_abs_pos(pos, t):
+    """Absolute token position stored in each ring slot. pos (B,) → (B,T)."""
+    slots = jnp.arange(t)[None, :]
+    cur = pos[:, None]
+    # latest write to slot s has abs position: largest p <= cur with p % t == s
+    base = (cur // t) * t + slots
+    return jnp.where(base <= cur, base, base - t)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(rng, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(rng, 8)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dtype)},
+        "wuq": dense_init(ks[1], m.q_lora_rank, (h, qk_dim), dtype),
+        "wdkv": dense_init(ks[2], d, m.kv_lora_rank, dtype),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dtype)},
+        "wkr": dense_init(ks[3], d, m.qk_rope_head_dim, dtype),  # shared rope key
+        "wuk": dense_init(ks[4], m.kv_lora_rank, (h, m.qk_nope_head_dim), dtype),
+        "wuv": dense_init(ks[5], m.kv_lora_rank, (h, m.v_head_dim), dtype),
+        "wo": dense_init(ks[6], h * m.v_head_dim, d, dtype),
+    }
+
+
+def mla_apply(params, cfg: ModelConfig, x, positions, *, causal: bool = True):
+    from repro.models.common import rmsnorm
+
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["wdq"]))
+    q = jnp.einsum("bsr,rhk->bhsk", cq, params["wuq"])  # (B,H,S,nope+rope)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = rmsnorm(params["kv_norm"], jnp.einsum("bsd,dr->bsr", x, params["wdkv"]))
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, params["wkr"])[:, None], positions, cfg.rope_theta
+    )  # (B,1,S,rope) shared across heads
+    k_nope = jnp.einsum("bsr,rhk->bhsk", ckv, params["wuk"])
+    v = jnp.einsum("bsr,rhk->bhsk", ckv, params["wuv"])
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    kpos = jnp.arange(s)[None, :]
+
+    def scores(qn, qr, q_off):
+        s_ = (
+            jnp.einsum("bhqk,bhmk->bhqm", qn.astype(jnp.float32), k_nope.astype(jnp.float32))
+            + jnp.einsum("bhqk,bmk->bhqm", qr.astype(jnp.float32), k_rope[:, 0].astype(jnp.float32))
+        ) * scale
+        if causal:
+            qpos = q_off + jnp.arange(qn.shape[2])[:, None]
+            s_ = jnp.where(qpos >= kpos, s_, -1e30)
+        p = jax.nn.softmax(s_, axis=-1)
+        return jnp.einsum("bhqm,bhmk->bhqk", p, v.astype(jnp.float32)).astype(x.dtype)
+
+    if s >= CHUNK_Q_THRESHOLD and s % CHUNK_Q == 0:
+        nq = s // CHUNK_Q
+        qn_c = q_nope.reshape(b, h, nq, CHUNK_Q, -1).transpose(2, 0, 1, 3, 4)
+        qr_c = q_rope.reshape(b, h, nq, CHUNK_Q, -1).transpose(2, 0, 1, 3, 4)
+
+        def body(_, inp):
+            qn, qr, idx = inp
+            return None, scores(qn, qr, idx * CHUNK_Q)
+
+        unroll = nq if nq <= CHUNK_UNROLL_MAX else 1
+        _, oc = jax.lax.scan(body, None, (qn_c, qr_c, jnp.arange(nq)), unroll=unroll)
+        o = oc.transpose(1, 2, 0, 3, 4).reshape(b, h, s, m.v_head_dim)
+    else:
+        o = scores(q_nope, q_rope, 0)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim)
+    return jnp.einsum("bsf,fd->bsd", o, params["wo"])
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def mla_decode(params, cfg: ModelConfig, x, cache):
+    """MLA decode: cache holds the compressed kv (512) + rope key (64) only —
+    the paper-…er, the DeepSeek memory saving that makes 128-head attention
+    servable. Up-projections are applied to the cached compressed stream."""
+    from repro.models.common import rmsnorm
+
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    t = cache["ckv"].shape[1]
+    pos = cache["pos"]
+
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["wdq"]))
+    q = jnp.einsum("bsr,rhk->bhsk", cq, params["wuq"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+
+    ckv_new = rmsnorm(params["kv_norm"], jnp.einsum("bsd,dr->bsr", x, params["wdkv"]))  # (B,1,R)
+    kr_new = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, params["wkr"])[:, None], pos[:, None], cfg.rope_theta
+    )[:, 0]  # (B,1,rope)
+
+    oh = jax.nn.one_hot(pos % t, t, dtype=cache["ckv"].dtype)  # (B,T)
+    ckv = cache["ckv"] * (1 - oh[:, :, None]) + ckv_new * oh[:, :, None]
+    kr = cache["kr"] * (1 - oh[:, :, None]) + kr_new * oh[:, :, None]
+
+    # §Perf H4 (weight absorption): fold W_uk into the query and keep the
+    # attention in the compressed kv space — the (T,R)→(H,T,dh) cache
+    # re-expansion (≈ H·dh/R ≈ 32× the flops/bytes at T=32k) disappears.
+    # Exact identity: (q·W_uk)ᵀ·(W_uk-free c) == qᵀ·(W_uk·c).
+    # bf16 operands + f32 accumulation: upcasting the (FSDP-sharded) wuk/wuv
+    # params would double their all-gather payload (measured: +3.2e10 B/step)
+    f32 = jnp.float32
+    q_abs = jnp.einsum("bhqk,rhk->bhqr", q_nope, params["wuk"],
+                       preferred_element_type=f32)  # (B,H,1,R)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s_ = (
+        jnp.einsum("bhqr,btr->bhqt", q_abs.astype(x.dtype), ckv, preferred_element_type=f32)
+        + jnp.einsum("bhqk,btk->bhqt", q_rope, kr, preferred_element_type=f32)
+    ) * scale
+    valid = jnp.arange(t)[None, :] < jnp.minimum(pos[:, None] + 1, t)
+    s_ = jnp.where(valid[:, None, None, :], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    o_c = jnp.einsum("bhqt,btr->bhqr", p.astype(x.dtype), ckv, preferred_element_type=f32)
+    o = jnp.einsum("bhqr,rhk->bhqk", o_c.astype(x.dtype), params["wuv"],
+                   preferred_element_type=f32).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * m.v_head_dim)
+    out = jnp.einsum("bsf,fd->bsd", o, params["wo"])
+    return out, {"ckv": ckv, "kr": kr, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_init(rng, cfg: ModelConfig, dtype):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], d, (h, dh), dtype),
+        "wk": dense_init(ks[1], d, (h, dh), dtype),
+        "wv": dense_init(ks[2], d, (h, dh), dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+
+
+def cross_apply(params, cfg: ModelConfig, x, enc_out):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wv"])
+    o = attention_ref(q, k, v, scale=dh**-0.5, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bsf,fd->bsd", o, params["wo"])
+
+
+def cross_kv(params, enc_out):
+    """Precompute a layer's cross-attention K/V from the encoder output —
+    §Perf H5: computed once per request instead of once per decode step."""
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wv"])
+    return k, v
+
+
+def cross_apply_cached(params, cfg: ModelConfig, x, k, v):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    o = attention_ref(q, k, v, scale=dh**-0.5, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bsf,fd->bsd", o, params["wo"])

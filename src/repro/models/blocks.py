@@ -1,0 +1,175 @@
+"""Transformer / SSM / hybrid block definitions (init + apply + decode).
+
+A *block* is one scan-unit of the layer stack. Per-layer heterogeneity
+(gemma2's local/global alternation) is expressed with a scanned scalar
+(``is_local``) feeding a dynamic window — same code path, no branch, so the
+stack still scans as one homogeneous body.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import make_norm
+from repro.models.mlp import mlp_apply, mlp_init, moe_apply, moe_apply_sparse, moe_init
+from repro.models.ssm import (
+    mamba1_apply, mamba1_decode, mamba1_init, mamba1_init_cache,
+    mamba2_apply, mamba2_decode, mamba2_init, mamba2_init_cache,
+)
+
+
+def _attn_init(rng, cfg: ModelConfig, dtype):
+    if cfg.attn == "mla":
+        return attn.mla_init(rng, cfg, dtype)
+    return attn.gqa_init(rng, cfg, dtype)
+
+
+def decoder_block_init(rng, cfg: ModelConfig, dtype):
+    """Standard pre-norm decoder block: attn + mlp/moe."""
+    norm_init, _ = make_norm(cfg.norm)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {
+        "ln_attn": norm_init(cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+        "ln_mlp": norm_init(cfg.d_model, dtype),
+        "mlp": moe_init(k2, cfg, dtype) if cfg.moe else mlp_init(k3, cfg, dtype),
+    }
+    if cfg.post_norm:
+        p["ln_attn_post"] = norm_init(cfg.d_model, dtype)
+        p["ln_mlp_post"] = norm_init(cfg.d_model, dtype)
+    return p
+
+
+def _window_for_layer(cfg: ModelConfig, is_local):
+    """Dynamic per-layer window: None → no windowing anywhere."""
+    if cfg.attn == "swa":
+        return cfg.window
+    if cfg.attn == "local_global" and is_local is not None:
+        return None  # handled inside via dynamic mask
+    return None
+
+
+def decoder_block_apply(
+    params,
+    cfg: ModelConfig,
+    x,
+    positions,
+    *,
+    is_local=None,  # scanned scalar for local_global archs
+    moe_dispatch: str = "sparse",
+    use_kernel: bool = False,
+):
+    _, norm = make_norm(cfg.norm)
+    h = norm(params["ln_attn"], x)
+    if cfg.attn == "mla":
+        a = attn.mla_apply(params["attn"], cfg, h, positions)
+    elif cfg.attn == "local_global":
+        # dynamic window: local layers mask to cfg.window, global layers don't
+        s = x.shape[1]
+        win = jnp.where(is_local.astype(bool), cfg.window, s + 1)
+        a = _dynamic_window_attention(params["attn"], cfg, h, positions, win)
+    else:
+        a = attn.gqa_apply(
+            params["attn"], cfg, h, positions,
+            window=cfg.window if cfg.attn == "swa" else None,
+            use_kernel=use_kernel,
+        )
+    if cfg.post_norm:
+        a = norm(params["ln_attn_post"], a)
+    x = x + a
+
+    h = norm(params["ln_mlp"], x)
+    if cfg.moe:
+        m = moe_apply_sparse(params["mlp"], cfg, h) if moe_dispatch == "sparse" else moe_apply(params["mlp"], cfg, h)
+    else:
+        m = mlp_apply(params["mlp"], cfg, h)
+    if cfg.post_norm:
+        m = norm(params["ln_mlp_post"], m)
+    return x + m
+
+
+def _dynamic_window_attention(params, cfg: ModelConfig, x, positions, win):
+    """GQA with a *traced* window size (gemma2 local/global alternation)."""
+    from repro.models.attention import _rope, _softcap_attention
+
+    b, s, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"])
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    o = _softcap_attention(cfg, q, k, v, dh**-0.5, True, win)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return jnp.einsum("bsf,fd->bsd", o, params["wo"])
+
+
+def decoder_block_decode(params, cfg: ModelConfig, x, cache, *, is_local=None):
+    _, norm = make_norm(cfg.norm)
+    h = norm(params["ln_attn"], x)
+    if cfg.attn == "mla":
+        a, cache_a = attn.mla_decode(params["attn"], cfg, h, cache)
+    else:
+        window = cfg.window if cfg.attn == "swa" else None
+        if cfg.attn == "local_global" and is_local is not None:
+            # traced per-layer window: local layers mask to cfg.window,
+            # global layers get an effectively-infinite window
+            window = jnp.where(is_local.astype(bool), cfg.window, 1 << 30)
+        a, cache_a = attn.gqa_decode(params["attn"], cfg, h, cache, window=window)
+    if cfg.post_norm:
+        a = norm(params["ln_attn_post"], a)
+    x = x + a
+    h = norm(params["ln_mlp"], x)
+    if cfg.moe:
+        m = moe_apply_sparse(params["mlp"], cfg, h)
+    else:
+        m = mlp_apply(params["mlp"], cfg, h)
+    if cfg.post_norm:
+        m = norm(params["ln_mlp_post"], m)
+    return x + m, cache_a
+
+
+def decoder_block_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.attn == "mla":
+        return attn.mla_init_cache(cfg, batch, max_len, dtype)
+    hk, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    t = min(max_len, cfg.window) if cfg.attn == "swa" and cfg.window else max_len
+    return {
+        "k": jnp.zeros((batch, hk, t, dh), dtype),
+        "v": jnp.zeros((batch, hk, t, dh), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSM blocks
+# ---------------------------------------------------------------------------
+
+
+def ssm_block_init(rng, cfg: ModelConfig, dtype):
+    norm_init, _ = make_norm(cfg.norm)
+    k1 = jax.random.fold_in(rng, 1)
+    init = mamba1_init if cfg.ssm.variant == "mamba1" else mamba2_init
+    return {"ln": norm_init(cfg.d_model, dtype), "ssm": init(k1, cfg, dtype)}
+
+
+def ssm_block_apply(params, cfg: ModelConfig, x):
+    _, norm = make_norm(cfg.norm)
+    apply = mamba1_apply if cfg.ssm.variant == "mamba1" else mamba2_apply
+    return x + apply(params["ssm"], cfg, norm(params["ln"], x))
+
+
+def ssm_block_decode(params, cfg: ModelConfig, x, cache):
+    _, norm = make_norm(cfg.norm)
+    dec = mamba1_decode if cfg.ssm.variant == "mamba1" else mamba2_decode
+    out, cache = dec(params["ssm"], cfg, norm(params["ln"], x), cache)
+    return x + out, cache
+
+
+def ssm_block_init_cache(cfg: ModelConfig, batch: int, dtype):
+    init = mamba1_init_cache if cfg.ssm.variant == "mamba1" else mamba2_init_cache
+    return init(cfg, batch, dtype)

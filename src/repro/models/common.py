@@ -1,0 +1,64 @@
+"""Shared building blocks: norms, dense layers, embeddings, softcap."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(rng, in_dim: int, out_dims, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal fan-in init; out_dims may be a tuple (fused dims)."""
+    out_dims = (out_dims,) if isinstance(out_dims, int) else tuple(out_dims)
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    w = jax.random.truncated_normal(rng, -2.0, 2.0, (in_dim, *out_dims), jnp.float32) * scale
+    return w.astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype=jnp.float32):
+    # 1/sqrt(dim) scale keeps tied-unembed logits at unit variance
+    w = jax.random.truncated_normal(rng, -2.0, 2.0, (vocab, dim), jnp.float32) * (dim**-0.5)
+    return w.astype(dtype)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+def softcap(x, cap: float | None):
+    """Gemma-2 logit soft-capping: cap·tanh(x/cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    """Pad vocab so it tiles cleanly over the model axis (e.g. whisper 51865)."""
+    return -(-vocab // multiple) * multiple

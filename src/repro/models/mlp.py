@@ -1,0 +1,133 @@
+"""Feed-forward blocks: SwiGLU / GELU MLP and top-k MoE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+from repro.sharding.rules import constrain
+
+
+def mlp_init(rng, cfg: ModelConfig, dtype, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "wi": dense_init(ks[0], d, f, dtype),
+            "wg": dense_init(ks[1], d, f, dtype),
+            "wo": dense_init(ks[2], f, d, dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], d, f, dtype),
+        "wo": dense_init(ks[2], f, d, dtype),
+    }
+
+
+def mlp_apply(params, cfg: ModelConfig, x):
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (mixtral / deepseek-v2)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(rng, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], d, m.n_experts, jnp.float32),
+        "wi": dense_init(ks[1], d, (m.n_experts, fe), dtype),
+        "wg": dense_init(ks[2], d, (m.n_experts, fe), dtype),
+        "wo": dense_init(ks[3], fe, (m.n_experts, d), dtype),
+    }
+    if m.n_shared:
+        p["shared"] = mlp_init(ks[4], cfg, dtype, d_ff=fe * m.n_shared)
+    return p
+
+
+def moe_apply(params, cfg: ModelConfig, x):
+    """Dense-dispatch top-k MoE (einsum over the expert axis).
+
+    Exact (no capacity drops) and GSPMD-friendly: the expert axis is sharded
+    over the ``model`` mesh axis (expert parallelism); the one-hot dispatch
+    einsums lower to all-to-all-free sharded matmuls on the sharded expert
+    dim. For production serving a capacity-based all-to-all dispatch is the
+    next hillclimb step; for training the dense form is the roofline-friendly
+    baseline at these expert counts.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    weights = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(weights, m.top_k)  # (B,S,K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)  # renormalize
+    gate = jnp.zeros_like(weights).at[
+        jnp.arange(b)[:, None, None], jnp.arange(s)[None, :, None], topi
+    ].add(topw)  # (B,S,E) sparse gates (scatter-add keeps duplicates correct)
+
+    h = jnp.einsum("bsd,def->bsef", x, params["wi"])
+    g = jnp.einsum("bsd,def->bsef", x, params["wg"])
+    h = jax.nn.silu(g) * h
+    out = jnp.einsum("bsef,fed->bsed", h, params["wo"])
+    out = jnp.einsum("bsed,bse->bsd", out, gate.astype(x.dtype))
+    if m.n_shared:
+        from repro.models.mlp import mlp_apply  # self-import for clarity
+
+        out = out + mlp_apply(params["shared"], cfg, x)
+    # load-balancing auxiliary loss ingredients (returned via aux if needed)
+    return out
+
+
+def moe_apply_sparse(params, cfg: ModelConfig, x, capacity_factor: float = 1.25):
+    """Gathered-dispatch variant (beyond-paper optimization, §Perf): instead
+    of running every token through every expert (dense dispatch inflates
+    FLOPs by E/K), tokens are dispatched to their top-k experts with a
+    capacity buffer — compute scales with K, not E.
+
+    §Perf (deepseek hillclimb): capacity_factor 2.0 → 1.25 removed 37% of
+    expert-buffer FLOPs/bytes; overflow drop rate at balanced routing stays
+    <2% (standard Switch-Transformer setting)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    n_tok = b * s
+    xf = x.reshape(n_tok, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"])
+    weights = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(weights, m.top_k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # capacity per expert (with slack); overflow tokens are dropped (standard)
+    cap = max(1, int(capacity_factor * n_tok * m.top_k / m.n_experts))
+    flat_e = topi.reshape(-1)  # (T*K,)
+    flat_w = topw.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n_tok), m.top_k)
+    # position of each (token,expert) pair within its expert's buffer
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    pos_in_e = jnp.arange(n_tok * m.top_k) - jnp.searchsorted(e_sorted, e_sorted, side="left")
+    keep = pos_in_e < cap
+    buf = jnp.zeros((m.n_experts, cap, d), x.dtype)
+    buf = buf.at[e_sorted, jnp.where(keep, pos_in_e, cap - 1)].add(
+        jnp.where(keep[:, None], xf[flat_t[order]], 0)
+    )
+    buf = constrain(buf, "model", None, None)  # expert-parallel dispatch
+    h = jnp.einsum("ecd,def->ecf", buf, params["wi"])
+    g = jnp.einsum("ecd,def->ecf", buf, params["wg"])
+    h = jax.nn.silu(g) * h
+    eo = jnp.einsum("ecf,fed->ecd", h, params["wo"])  # (E,cap,D)
+    out = jnp.zeros((n_tok, d), x.dtype)
+    contrib = eo[e_sorted, jnp.where(keep, pos_in_e, cap - 1)] * flat_w[order][:, None].astype(x.dtype)
+    out = out.at[flat_t[order]].add(jnp.where(keep[:, None], contrib, 0))
+    out = out.reshape(b, s, d)
+    if m.n_shared:
+        out = out + mlp_apply(params["shared"], cfg, x)
+    return out

@@ -1,0 +1,405 @@
+"""Model assembly: decoder-only LMs, hybrid (zamba2), SSM (falcon-mamba),
+and encoder-decoder (whisper) — all scanned over the layer stack.
+
+Public API (pure functions over a params pytree):
+
+    init_params(cfg, rng)                      → params
+    forward(cfg, params, batch)                → logits (B,S,Vpad)
+    init_cache(cfg, batch, max_len)            → cache
+    decode_step(cfg, params, tokens, cache, …) → (logits, cache)
+
+The layer stack is a ``lax.scan`` over stacked params (+ ``jax.checkpoint``
+on the body), keeping the HLO O(1) in depth — essential for compiling the
+40 dry-run cells and for remat at train time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.common import embed_init, make_norm, pad_vocab, softcap
+from repro.sharding.rules import constrain
+
+REMAT_POLICY = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+def _stack_init(rng, n: int, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+def _model_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _local_pattern(cfg: ModelConfig) -> np.ndarray:
+    """gemma2: even layers local, odd layers global."""
+    return (np.arange(cfg.n_layers) % 2 == 0).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    dtype = _model_dtype(cfg)
+    norm_init, _ = make_norm(cfg.norm)
+    vpad = pad_vocab(cfg.vocab)
+    k_embed, k_layers, k_head, k_enc, k_shared = jax.random.split(rng, 5)
+
+    params: dict = {
+        "embed": embed_init(k_embed, vpad, cfg.d_model, dtype),
+        "ln_f": norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(k_head, vpad, cfg.d_model, dtype)
+
+    if cfg.ssm and not cfg.hybrid_attn_every:  # pure SSM (falcon-mamba)
+        params["layers"] = _stack_init(
+            k_layers, cfg.n_layers, lambda k: blocks.ssm_block_init(k, cfg, dtype)
+        )
+    elif cfg.hybrid_attn_every:  # zamba2: groups of SSM layers + shared attn
+        g = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // g
+        params["layers"] = _stack_init(
+            k_layers, n_groups * g, lambda k: blocks.ssm_block_init(k, cfg, dtype)
+        )
+        # reshape leading dim (n_groups*g, …) → (n_groups, g, …)
+        params["layers"] = jax.tree.map(
+            lambda x: x.reshape(n_groups, g, *x.shape[1:]), params["layers"]
+        )
+        params["shared_attn"] = blocks.decoder_block_init(k_shared, cfg, dtype)
+    elif cfg.encoder:  # whisper
+        enc_cfg = cfg
+        params["enc_layers"] = _stack_init(
+            k_enc, cfg.encoder.n_layers, lambda k: _enc_block_init(k, cfg, dtype)
+        )
+        params["enc_ln_f"] = norm_init(cfg.d_model, dtype)
+        params["layers"] = _stack_init(
+            k_layers, cfg.n_layers, lambda k: _dec_block_init(k, cfg, dtype)
+        )
+    else:
+        params["layers"] = _stack_init(
+            k_layers, cfg.n_layers, lambda k: blocks.decoder_block_init(k, cfg, dtype)
+        )
+    return params
+
+
+def _enc_block_init(rng, cfg: ModelConfig, dtype):
+    from repro.models import attention as attn
+    from repro.models.mlp import mlp_init
+
+    norm_init, _ = make_norm(cfg.norm)
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln_attn": norm_init(cfg.d_model, dtype),
+        "attn": attn.gqa_init(k1, cfg, dtype),
+        "ln_mlp": norm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, cfg, dtype),
+    }
+
+
+def _dec_block_init(rng, cfg: ModelConfig, dtype):
+    from repro.models import attention as attn
+    from repro.models.mlp import mlp_init
+
+    norm_init, _ = make_norm(cfg.norm)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln_attn": norm_init(cfg.d_model, dtype),
+        "attn": attn.gqa_init(k1, cfg, dtype),
+        "ln_cross": norm_init(cfg.d_model, dtype),
+        "cross": attn.cross_init(k2, cfg, dtype),
+        "ln_mlp": norm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k3, cfg, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _positions(cfg: ModelConfig, tokens) -> jax.Array:
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.mrope:
+        return jnp.broadcast_to(pos[:, None], (b, 3, s))  # text: t=h=w
+    return pos
+
+
+def _sinusoid_at(pos: jax.Array, d: int, dtype) -> jax.Array:
+    """Sinusoidal row(s) for traced positions. pos (B,) → (B, d)."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32)[:, None] / jnp.power(10_000.0, dim / d)[None]
+    out = jnp.zeros((pos.shape[0], d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return out.astype(dtype)
+
+
+def _sinusoid(s: int, d: int, dtype) -> jax.Array:
+    pos = np.arange(s)[:, None]
+    dim = np.arange(0, d, 2)[None]
+    ang = pos / np.power(10_000.0, dim / d)
+    out = np.zeros((s, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out, dtype)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # (B, S) int32
+    *,
+    frames: Optional[jax.Array] = None,  # (B, T, D) stubbed modality frontend
+    moe_dispatch: str = "sparse",
+    use_flash_kernel: bool = False,
+    remat: bool = True,
+    layer_unroll: bool = False,  # unroll layer scans (dry-run FLOPs fidelity)
+    features_only: bool = False,  # return pre-head features (fused chunked CE)
+) -> jax.Array:
+    dtype = _model_dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    positions = _positions(cfg, tokens)
+
+    if cfg.ssm and not cfg.hybrid_attn_every:
+        body = lambda xx, lp: (constrain(blocks.ssm_block_apply(lp, cfg, xx), "batch", None, None), None)
+        if remat:
+            body = jax.checkpoint(body, policy=REMAT_POLICY)
+        x, _ = jax.lax.scan(body, x, params["layers"],
+                            unroll=cfg.n_layers if layer_unroll else 1)
+    elif cfg.hybrid_attn_every:
+        shared = params["shared_attn"]
+
+        def group_body(xx, group_params):
+            def inner(xx2, lp):
+                return blocks.ssm_block_apply(lp, cfg, xx2), None
+
+            xx, _ = jax.lax.scan(inner, xx, group_params,
+                                 unroll=cfg.hybrid_attn_every if layer_unroll else 1)
+            xx = blocks.decoder_block_apply(
+                shared, cfg, xx, positions, moe_dispatch=moe_dispatch, use_kernel=use_flash_kernel
+            )
+            return constrain(xx, "batch", None, None), None
+
+        gb = jax.checkpoint(group_body, policy=REMAT_POLICY) if remat else group_body
+        n_groups = cfg.n_layers // cfg.hybrid_attn_every
+        x, _ = jax.lax.scan(gb, x, params["layers"],
+                            unroll=n_groups if layer_unroll else 1)
+    elif cfg.encoder:
+        enc = _encode(cfg, params, frames, layer_unroll=layer_unroll)
+
+        def dec_body(xx, lp):
+            return constrain(_dec_block_apply(lp, cfg, xx, positions, enc), "batch", None, None), None
+
+        db = jax.checkpoint(dec_body, policy=REMAT_POLICY) if remat else dec_body
+        x = x + _sinusoid(x.shape[1], cfg.d_model, dtype)[None]
+        x, _ = jax.lax.scan(db, x, params["layers"],
+                            unroll=cfg.n_layers if layer_unroll else 1)
+    else:
+        is_local = (
+            jnp.asarray(_local_pattern(cfg)) if cfg.attn == "local_global" else jnp.zeros(cfg.n_layers, jnp.int32)
+        )
+
+        def body(xx, scanned):
+            lp, loc = scanned
+            out = blocks.decoder_block_apply(
+                lp, cfg, xx, positions, is_local=loc,
+                moe_dispatch=moe_dispatch, use_kernel=use_flash_kernel,
+            )
+            return constrain(out, "batch", None, None), None
+
+        b = jax.checkpoint(body, policy=REMAT_POLICY) if remat else body
+        x, _ = jax.lax.scan(b, x, (params["layers"], is_local),
+                            unroll=cfg.n_layers if layer_unroll else 1)
+
+    _, norm = make_norm(cfg.norm)
+    x = norm(params["ln_f"], x)
+    if features_only:
+        return x
+    return unembed(cfg, params, x)
+
+
+def unembed(cfg: ModelConfig, params, x) -> jax.Array:
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def _encode(cfg: ModelConfig, params, frames, *, layer_unroll: bool = False):
+    from repro.models import attention as attn
+    from repro.models.mlp import mlp_apply
+
+    dtype = _model_dtype(cfg)
+    _, norm = make_norm(cfg.norm)
+    x = frames.astype(dtype) + _sinusoid(frames.shape[1], cfg.d_model, dtype)[None]
+
+    def body(xx, lp):
+        h = norm(lp["ln_attn"], xx)
+        a = attn.gqa_apply(lp["attn"], cfg, h, None, causal=False)
+        xx = xx + a
+        h = norm(lp["ln_mlp"], xx)
+        return constrain(xx + mlp_apply(lp["mlp"], cfg, h), "batch", None, None), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body, policy=REMAT_POLICY), x, params["enc_layers"],
+                        unroll=cfg.encoder.n_layers if layer_unroll else 1)
+    return norm(params["enc_ln_f"], x)
+
+
+def _dec_block_apply(lp, cfg: ModelConfig, x, positions, enc_out):
+    from repro.models import attention as attn
+    from repro.models.mlp import mlp_apply
+
+    _, norm = make_norm(cfg.norm)
+    h = norm(lp["ln_attn"], x)
+    x = x + attn.gqa_apply(lp["attn"], cfg, h, None, causal=True)
+    h = norm(lp["ln_cross"], x)
+    x = x + attn.cross_apply(lp["cross"], cfg, h, enc_out)
+    h = norm(lp["ln_mlp"], x)
+    return x + mlp_apply(lp["mlp"], cfg, h)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = _model_dtype(cfg)
+
+    def stacked(n, mk):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[mk() for _ in range(n)])
+
+    if cfg.ssm and not cfg.hybrid_attn_every:
+        return {"layers": stacked(cfg.n_layers, lambda: blocks.ssm_block_init_cache(cfg, batch, dtype))}
+    if cfg.hybrid_attn_every:
+        g = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // g
+        ssm_c = stacked(n_groups * g, lambda: blocks.ssm_block_init_cache(cfg, batch, dtype))
+        ssm_c = jax.tree.map(lambda x: x.reshape(n_groups, g, *x.shape[1:]), ssm_c)
+        attn_c = stacked(n_groups, lambda: blocks.decoder_block_init_cache(cfg, batch, max_len, dtype))
+        return {"ssm": ssm_c, "attn": attn_c}
+    if cfg.encoder:
+        return {"layers": stacked(cfg.n_layers, lambda: blocks.decoder_block_init_cache(cfg, batch, max_len, dtype))}
+    return {"layers": stacked(cfg.n_layers, lambda: blocks.decoder_block_init_cache(cfg, batch, max_len, dtype))}
+
+
+def init_cross_cache(cfg: ModelConfig, params: dict, enc_out: jax.Array):
+    """§Perf H5 (whisper): per-layer cross-attention K/V, computed once per
+    request. Returns stacked (k, v) with leading layer dim, to be stored
+    under cache["cross"]."""
+    from repro.models.attention import cross_kv
+
+    return jax.vmap(lambda lp: cross_kv(lp["cross"], enc_out))(params["layers"])
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # (B, 1)
+    cache: dict,
+    *,
+    enc_out: Optional[jax.Array] = None,
+    layer_unroll: bool = False,
+) -> tuple[jax.Array, dict]:
+    dtype = _model_dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+
+    if cfg.ssm and not cfg.hybrid_attn_every:
+        def body(xx, sc):
+            lp, lc = sc
+            out, nc = blocks.ssm_block_decode(lp, cfg, xx, lc)
+            return out, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]),
+                                    unroll=cfg.n_layers if layer_unroll else 1)
+        cache = {"layers": new_cache}
+    elif cfg.hybrid_attn_every:
+        shared = params["shared_attn"]
+
+        def group_body(xx, sc):
+            gp, gc_ssm, gc_attn = sc
+
+            def inner(xx2, sc2):
+                lp, lc = sc2
+                out, nc = blocks.ssm_block_decode(lp, cfg, xx2, lc)
+                return out, nc
+
+            xx, new_ssm = jax.lax.scan(inner, xx, (gp, gc_ssm),
+                                       unroll=cfg.hybrid_attn_every if layer_unroll else 1)
+            xx, new_attn = blocks.decoder_block_decode(shared, cfg, xx, gc_attn)
+            return xx, (new_ssm, new_attn)
+
+        x, (new_ssm, new_attn) = jax.lax.scan(
+            group_body, x, (params["layers"], cache["ssm"], cache["attn"]),
+            unroll=(cfg.n_layers // cfg.hybrid_attn_every) if layer_unroll else 1,
+        )
+        cache = {"ssm": new_ssm, "attn": new_attn}
+    elif cfg.encoder:
+        # whisper decode: add the sinusoidal absolute-position row
+        pos0 = cache["layers"]["pos"][0]  # (B,) current position
+        x = x + _sinusoid_at(pos0, cfg.d_model, dtype)[:, None, :]
+
+        # §Perf H5: cross-attention K/V cached once per request instead of
+        # re-projected from the 1500-frame encoder output every decode step.
+        cross = cache.get("cross")
+
+        def body(xx, sc):
+            from repro.models import attention as attn
+            from repro.models.mlp import mlp_apply
+
+            if cross is not None:
+                lp, lc, (ck, cv) = sc
+            else:
+                lp, lc = sc
+            _, norm = make_norm(cfg.norm)
+            h = norm(lp["ln_attn"], xx)
+            a, nc = attn.gqa_decode(lp["attn"], cfg, h, lc)
+            xx = xx + a
+            h = norm(lp["ln_cross"], xx)
+            if cross is not None:
+                xx = xx + attn.cross_apply_cached(lp["cross"], cfg, h, ck, cv)
+            else:
+                xx = xx + attn.cross_apply(lp["cross"], cfg, h, enc_out)
+            h = norm(lp["ln_mlp"], xx)
+            return xx + mlp_apply(lp["mlp"], cfg, h), nc
+
+        xs = (params["layers"], cache["layers"])
+        if cross is not None:
+            xs = xs + (cross,)
+        x, new_cache = jax.lax.scan(body, x, xs,
+                                    unroll=cfg.n_layers if layer_unroll else 1)
+        cache = dict(cache, layers=new_cache)
+    else:
+        is_local = (
+            jnp.asarray(_local_pattern(cfg)) if cfg.attn == "local_global" else jnp.zeros(cfg.n_layers, jnp.int32)
+        )
+
+        def body(xx, sc):
+            lp, lc, loc = sc
+            out, nc = blocks.decoder_block_decode(lp, cfg, xx, lc, is_local=loc)
+            return out, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"], is_local),
+                                    unroll=cfg.n_layers if layer_unroll else 1)
+        cache = {"layers": new_cache}
+
+    _, norm = make_norm(cfg.norm)
+    x = norm(params["ln_f"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits, cache

@@ -1,0 +1,47 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# M-RoPE: fraction of rotary dims assigned to (temporal, height, width)
+MROPE_SECTIONS = (0.25, 0.375, 0.375)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """x: (B, H, S, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,dh/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (B, 3, S) — (temporal, height, width) position ids. The
+    rotary dim is split into three contiguous sections, each rotated by its
+    own position stream. For pure text all three streams are equal and
+    M-RoPE degenerates to RoPE (tested property).
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = rope_freqs(dh, theta)  # (half,)
+    # section boundaries over the half-dim frequency index
+    s1 = int(half * MROPE_SECTIONS[0])
+    s2 = s1 + int(half * MROPE_SECTIONS[1])
+    sec = jnp.zeros((half,), jnp.int32).at[s1:s2].set(1).at[s2:].set(2)  # (half,)
+    # positions3 (B,3,S) → per-frequency-slot positions (B, half, S)
+    pos = positions3.astype(jnp.float32)[:, sec, :]  # (B, half, S)
+    angles = pos.transpose(0, 2, 1)[:, None, :, :] * freqs[None, None, None, :]  # (B,1,S,half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

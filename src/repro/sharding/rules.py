@@ -1,0 +1,167 @@
+"""Logical sharding rules: param-tree paths (+shapes, +mesh) → PartitionSpec.
+
+Scheme (DESIGN.md §6): FSDP over ``data``, tensor/expert parallelism over
+``model``, pure data parallelism over ``pod`` (params replicated across
+pods — the local-SGD/no-sync outer axis). Rules are *divisibility-aware*:
+a dim that does not divide its mesh axis falls back per-tensor —
+- MoE expert dim not divisible (mixtral: 8 experts on model=16) → shard the
+  expert FFN dim over 'model' instead;
+- q/kv head count not divisible (starcoder2 24H, phi3 40H, gemma2 8H,
+  qwen2 12H) → heads replicated (pure FSDP attention) — an honest baseline
+  cost that shows up in the roofline table; head-dim sharding is a §Perf
+  hillclimb knob.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex on path, trailing-dims spec); leading dims (layer stacks) → None
+_RULES: list[tuple[str, tuple]] = [
+    (r"^(embed|lm_head)$", ("model", "data")),
+    (r"attn/w[qkv]$", ("data", "model", None)),
+    (r"attn/wo$", ("model", "data")),
+    # MLA
+    (r"attn/wdq$", ("data", "model")),
+    (r"attn/wuq$", ("data", "model", None)),
+    (r"attn/wdkv$", ("data", "model")),
+    (r"attn/wkr$", ("data", None)),
+    (r"attn/wuk$", (None, "model", None)),
+    (r"attn/wuv$", (None, "model", None)),
+    (r"cross/w[qkv]$", ("data", "model", None)),
+    (r"cross/wo$", ("model", "data")),
+    # dense MLP
+    (r"router$", ("data", None)),
+    (r"(mlp|shared)/w[ig]$", ("data", "model")),
+    (r"(mlp|shared)/wo$", ("model", "data")),
+    # mamba
+    (r"ssm/in_proj$", ("data", "model")),
+    (r"ssm/conv_[wb]$", ()),
+    (r"ssm/x_proj$", ("model", None)),
+    (r"ssm/dt_proj$", (None, "model")),
+    (r"ssm/dt_bias$", ("model",)),
+    (r"ssm/A_log$", ("model", None)),
+    (r"ssm/D$", ("model",)),
+    (r"ssm/norm_scale$", ("model",)),
+    (r"ssm/out_proj$", ("model", "data")),
+    (r".*", ()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fits(mesh: Mesh, axis, dim: int) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple) and not all(a in mesh.axis_names for a in axis):
+        return False
+    if not isinstance(axis, tuple) and axis not in mesh.axis_names:
+        return False
+    return dim % _axis_size(mesh, axis) == 0
+
+
+def finalize_spec(spec: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Pad to rank and drop axes that don't divide (or don't exist)."""
+    spec = tuple(spec)
+    if len(spec) > len(shape):
+        return P()
+    full = (None,) * (len(shape) - len(spec)) + spec
+    out = tuple(a if _fits(mesh, a, d) else None for a, d in zip(full, shape))
+    return P(*out)
+
+
+def _spec_for(path: str, shape: tuple, mesh: Mesh) -> P:
+    ndim = len(shape)
+    # MoE expert tensors: stacked rank-4 (L,d,E,f)/(L,f,E,d)
+    if re.search(r"mlp/w[ig]$", path) and ndim >= 4:
+        if _fits(mesh, "model", shape[-2]):  # experts divide → EP
+            return finalize_spec(("data", "model", None), shape, mesh)
+        return finalize_spec(("data", None, "model"), shape, mesh)
+    if re.search(r"mlp/wo$", path) and ndim >= 4:
+        if _fits(mesh, "model", shape[-2]):
+            return finalize_spec((None, "model", "data"), shape, mesh)
+        return finalize_spec(("model", None, "data"), shape, mesh)
+    for pattern, spec in _RULES:
+        if re.search(pattern, path):
+            return finalize_spec(spec, shape, mesh)
+    return P()
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec tree matching the params tree (shape/mesh aware)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _spec_for(_path_str(path), tuple(getattr(x, "shape", ())), mesh),
+        params,
+    )
+
+
+def param_shardings(mesh: Mesh, params):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = batch_axes(mesh)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def current_mesh() -> Optional[Mesh]:
+    """Mesh from the enclosing ``with mesh:`` context, if any."""
+    try:
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint that degrades gracefully: outside a mesh
+    context it is a no-op; axes that don't exist or don't divide are
+    dropped. ``"batch"`` expands to the (pod, data) axes.
+
+    This is the mechanism that pins activations to batch-sharded layouts so
+    GSPMD propagation cannot pick pathological layouts (observed: replicated
+    batch + sharded d_model on the 16×16 mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for a in spec:
+        if a == "batch":
+            axes = batch_axes(mesh)
+            resolved.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        else:
+            resolved.append(a)
+    final = tuple(
+        a if _fits(mesh, a, d) else None for a, d in zip(resolved, x.shape)
+    )
+    return jax.lax.with_sharding_constraint(x, P(*final))

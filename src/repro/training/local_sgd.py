@@ -1,0 +1,119 @@
+"""No-Sync data parallelism — the paper's insight applied to LM training.
+
+The paper removes the per-iteration barrier from an iterative solver and
+lets workers run ahead on (boundedly) stale shared state. For distributed
+training the per-step gradient all-reduce across the *slowest* link (the
+cross-pod ICI/DCN hop) is exactly such a barrier. This module implements:
+
+* **local-SGD / bounded-staleness DP**: each pod takes ``H`` local optimizer
+  steps on its own replica (replicas live in a leading ``R`` dim sharded over
+  the ``pod`` axis), then replicas are averaged — one cross-pod collective
+  per H steps instead of per step (the stale-sync PageRank schedule, DESIGN
+  §2).
+* **compressed outer sync**: the outer delta ("pseudo-gradient") is
+  quantized to int8 with a per-tensor scale and error feedback before the
+  cross-pod exchange — 4× fewer cross-pod bytes on the wire, with the
+  quantization error re-injected next round (convergence-safe).
+
+Convergence caveat mirrors the paper's No-Sync-Edge observation: unbounded
+staleness can diverge; H is the bounded-staleness knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+from repro.training.train_step import TrainState, loss_fn
+
+
+class LocalSGDState(NamedTuple):
+    params_r: dict  # leaves (R, ...) — one replica per pod
+    opt_r: OptState  # leaves (R, ...)
+    error_fb: dict  # error-feedback buffers, (R, ...) fp32
+    outer_step: jax.Array
+
+
+def replicate_state(state: TrainState, n_replicas: int) -> LocalSGDState:
+    rep = lambda x: jnp.broadcast_to(x[None], (n_replicas, *x.shape))
+    params_r = jax.tree.map(rep, state.params)
+    opt_r = OptState(
+        m=jax.tree.map(rep, state.opt.m),
+        v=jax.tree.map(rep, state.opt.v),
+        step=jnp.broadcast_to(state.opt.step[None], (n_replicas,)),
+    )
+    err = jax.tree.map(lambda p: jnp.zeros((n_replicas, *p.shape), jnp.float32), state.params)
+    return LocalSGDState(params_r, opt_r, err, jnp.zeros((), jnp.int32))
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def make_local_sgd_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    inner_steps: int = 4,
+    compress: bool = True,
+    moe_dispatch: str = "sparse",
+):
+    """Returns step(state: LocalSGDState, batches) -> (state, metrics).
+
+    ``batches``: dict of arrays with leading dims (R, H, local_batch, ...).
+    One call = H inner steps per replica + one outer sync — the collective
+    frequency drops H×, cross-pod bytes drop a further 4× with int8.
+    """
+
+    def inner_one(carry, batch):
+        params, opt = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch, moe_dispatch=moe_dispatch)
+        params, opt, gnorm = adamw_update(opt_cfg, params, grads, opt)
+        return (params, opt), loss
+
+    def per_replica(params, opt, batches_h):
+        (params, opt), losses = jax.lax.scan(inner_one, (params, opt), batches_h)
+        return params, opt, losses
+
+    def step(state: LocalSGDState, batches: dict):
+        # H inner steps on each replica independently (vmap over R; the R dim
+        # is sharded over "pod", so replicas never talk during inner steps)
+        params_r, opt_r, losses = jax.vmap(per_replica)(state.params_r, state.opt_r, batches)
+
+        # outer sync: average replicas through (optionally) int8-compressed
+        # deltas with error feedback
+        def sync(p_r, err):
+            center = jnp.mean(p_r.astype(jnp.float32), axis=0, keepdims=True)
+            delta = p_r.astype(jnp.float32) - center + err
+            if compress:
+                q, scale = jax.vmap(quantize_int8)(delta.reshape(delta.shape[0], -1))
+                deq = jax.vmap(dequantize_int8)(q, scale).reshape(delta.shape)
+                new_err = delta - deq
+                delta = deq
+            else:
+                new_err = jnp.zeros_like(delta)
+            avg = center[0] + jnp.mean(delta, axis=0)
+            return jnp.broadcast_to(avg, p_r.shape).astype(p_r.dtype), new_err
+
+        synced = jax.tree.map(sync, params_r, state.error_fb)
+        new_params = jax.tree.map(lambda t: t[0], synced, is_leaf=lambda t: isinstance(t, tuple))
+        new_err = jax.tree.map(lambda t: t[1], synced, is_leaf=lambda t: isinstance(t, tuple))
+
+        metrics = {"loss": jnp.mean(losses), "outer_step": state.outer_step + 1}
+        return (
+            LocalSGDState(new_params, opt_r, new_err, state.outer_step + 1),
+            metrics,
+        )
+
+    return step

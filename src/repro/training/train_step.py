@@ -1,0 +1,138 @@
+"""Training step: causal-LM loss, grads, AdamW — pjit/GSPMD-ready."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import pad_vocab
+from repro.models.model import forward
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+
+
+def init_train_state(cfg: ModelConfig, rng) -> TrainState:
+    from repro.models.model import init_params
+
+    params = init_params(cfg, rng)
+    return TrainState(params=params, opt=init_opt_state(params))
+
+
+def cross_entropy(
+    logits: jax.Array,  # (B, S, Vpad) f32
+    labels: jax.Array,  # (B, S) int32
+    vocab: int,
+    *,
+    chunk: Optional[int] = None,
+) -> jax.Array:
+    """Mean CE; padded vocab columns masked out of the softmax.
+
+    ``chunk`` (sequence chunking) bounds the peak f32 log-softmax buffer —
+    a §Perf memory optimization; numerics are identical.
+    """
+    vpad = logits.shape[-1]
+    if vpad > vocab:
+        pad_mask = (jnp.arange(vpad) >= vocab)[None, None, :]
+        logits = jnp.where(pad_mask, -1e30, logits)
+
+    def ce(lg, lb):
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+        return lse - gold
+
+    if chunk is None:
+        return jnp.mean(ce(logits, labels))
+    b, s, _ = logits.shape
+    n = s // chunk
+    lg = logits[:, : n * chunk].reshape(b, n, chunk, vpad).transpose(1, 0, 2, 3)
+    lb = labels[:, : n * chunk].reshape(b, n, chunk).transpose(1, 0, 2)
+    tot = jax.lax.scan(lambda c, x: (c + jnp.sum(ce(*x)), None), jnp.zeros((), jnp.float32), (lg, lb))[0]
+    return tot / (b * n * chunk)
+
+
+def fused_chunked_ce(
+    cfg: ModelConfig,
+    params,
+    feats: jax.Array,  # (B, S, D) pre-head features
+    labels: jax.Array,  # (B, S) next tokens
+    chunk: int,
+) -> jax.Array:
+    """Head matmul + CE per sequence chunk — the full (B,S,Vpad) logits
+    tensor is never materialized (the f32 logits of a 256k vocab at 4k·256
+    would dominate peak memory). The chunk scan is fully unrolled so the
+    head FLOPs are counted exactly by cost_analysis."""
+    from repro.models.model import unembed
+
+    b, s, d = feats.shape
+    n = max(1, s // chunk)
+    chunk = s // n
+    fc = feats[:, : n * chunk].reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels[:, : n * chunk].reshape(b, n, chunk).transpose(1, 0, 2)
+
+    from repro.sharding.rules import constrain
+
+    def body(tot, inp):
+        f, lb = inp
+        logits = unembed(cfg, params, f)  # (B, chunk, Vpad) f32
+        logits = constrain(logits, "batch", None, "model")
+        vpad = logits.shape[-1]
+        if vpad > cfg.vocab:
+            logits = jnp.where((jnp.arange(vpad) >= cfg.vocab)[None, None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (fc, lc), unroll=n)
+    return tot / (b * n * chunk)
+
+
+def loss_fn(
+    params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    moe_dispatch: str = "sparse",
+    ce_chunk: Optional[int] = 512,
+    layer_unroll: bool = False,
+) -> jax.Array:
+    kw = {}
+    if cfg.encoder:
+        kw["frames"] = batch["frames"]
+    feats = forward(
+        cfg, params, batch["tokens"], moe_dispatch=moe_dispatch,
+        layer_unroll=layer_unroll, features_only=True, **kw
+    )
+    return fused_chunked_ce(
+        cfg, params, feats[:, :-1], batch["tokens"][:, 1:], ce_chunk or feats.shape[1]
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    moe_dispatch: str = "sparse",
+    ce_chunk: Optional[int] = 512,
+    layer_unroll: bool = False,
+):
+    """Returns train_step(state, batch) -> (state, metrics). Shard via jit
+    in_shardings/out_shardings at the call site (launch/dryrun + launch/train)."""
+
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            state.params, cfg, batch, moe_dispatch=moe_dispatch, ce_chunk=ce_chunk,
+            layer_unroll=layer_unroll,
+        )
+        new_params, new_opt, gnorm = adamw_update(opt_cfg, state.params, grads, state.opt)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": new_opt.step}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step

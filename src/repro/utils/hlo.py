@@ -1,0 +1,64 @@
+"""HLO text analysis: collective bytes per category.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+(optimized, SPMD-partitioned) HLO and sum operand bytes of every collective
+op. Used by the roofline term (3) — see DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective in the HLO, by op kind.
+
+    Uses the *result* shape of each collective instruction line (the moved
+    payload; for all-gather the result is the gathered size which upper-
+    bounds wire bytes; for reduce-scatter the result is the scattered part —
+    we take max(result, operands) as the moved volume).
+    """
+    out: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "<name> = <shape> <op>(" — collectives start ops with kind
+        for kind in COLLECTIVE_OPS:
+            if re.search(rf"=\s*[^=]*\b{kind}(-start|-done)?\(", s):
+                if kind == "all-reduce" and "all-reduce-done" in s:
+                    continue  # counted at -start
+                shapes = _SHAPE_RE.findall("=".join(s.split("=")[1:]).split("(")[0])
+                lhs = _SHAPE_RE.finditer(s.split("(")[0])
+                total = sum(_shape_bytes(m) for m in lhs)
+                out[kind] += total
+                break
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,75 @@
+"""Roofline model for TPU v5e (per DESIGN.md §7).
+
+Terms (seconds, per device):
+    compute    = HLO_FLOPs / (chips × 197e12)
+    memory     = HLO_bytes / (chips × 819e9)
+    collective = collective_bytes / (chips × 50e9)
+
+cost_analysis() FLOPs/bytes from the SPMD-compiled module are *global*
+(whole-program); dividing by chip count gives the per-chip term under
+perfect balance (our shardings are balanced by construction; imbalance from
+GSPMD padding shows up as extra FLOPs, which is what we want to see).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound; with perfect overlap it's max(...)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def model_flops_util(self, model_flops: float) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — fraction of compiled compute that is
+        'useful' 6ND compute (catches remat/redundancy/padding waste)."""
+        return model_flops / max(self.flops, 1.0)
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time,
+        }
+
+
+def model_flops_train(n_params: float, tokens: float) -> float:
+    return 6.0 * n_params * tokens
+
+
+def model_flops_decode(n_params: float, tokens: float) -> float:
+    return 2.0 * n_params * tokens

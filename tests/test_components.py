@@ -1,0 +1,183 @@
+"""Component-level tests: MoE dispatch equivalence, SSM decode consistency,
+chunked attention exactness, RoPE/M-RoPE properties, optimizer."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+from repro.models import attention as attn_mod
+from repro.models.mlp import moe_apply, moe_apply_sparse, moe_init
+from repro.models.rope import apply_mrope, apply_rope
+from repro.models.ssm import (
+    mamba1_apply, mamba1_decode, mamba1_init, mamba1_init_cache,
+    mamba2_apply, mamba2_decode, mamba2_init, mamba2_init_cache,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_cfg(**kw):
+    base = dict(
+        name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, dtype="float32",
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def test_moe_sparse_matches_dense_with_ample_capacity():
+    cfg = tiny_cfg(moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=32))
+    params = moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    dense = moe_apply(params, cfg, x)
+    sparse = moe_apply_sparse(params, cfg, x, capacity_factor=2.0)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(sparse), rtol=2e-4, atol=2e-5)
+
+
+def test_moe_shared_expert_added():
+    cfg = tiny_cfg(moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=32, n_shared=1))
+    params = moe_init(KEY, cfg, jnp.float32)
+    assert "shared" in params
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 64))
+    out = moe_apply_sparse(params, cfg, x)
+    assert out.shape == x.shape and bool(jnp.all(jnp.isfinite(out)))
+
+
+@given(st.integers(2, 8), st.integers(1, 3))
+@settings(max_examples=10)
+def test_property_moe_gate_normalized(n_experts, top_k):
+    top_k = min(top_k, n_experts)
+    cfg = tiny_cfg(moe=MoEConfig(n_experts=n_experts, top_k=top_k, d_ff_expert=16))
+    params = moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 64)) * 0.1
+    out = moe_apply(params, cfg, x)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# SSM: forward vs decode consistency
+# ---------------------------------------------------------------------------
+
+
+def test_mamba1_decode_matches_forward():
+    cfg = tiny_cfg(ssm=SSMConfig(variant="mamba1", state=8, conv=4, expand=2, dt_rank=8))
+    params = mamba1_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 10, 64)) * 0.3
+    full = mamba1_apply(params, cfg, x)
+    cache = mamba1_init_cache(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(10):
+        o, cache = mamba1_decode(params, cfg, x[:, t : t + 1], cache)
+        outs.append(o[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=1e-4, atol=1e-5)
+
+
+def test_mamba2_decode_matches_forward():
+    cfg = tiny_cfg(ssm=SSMConfig(variant="mamba2", state=8, conv=4, expand=2, headdim=16))
+    params = mamba2_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 10, 64)) * 0.3
+    full = mamba2_apply(params, cfg, x)
+    cache = mamba2_init_cache(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(10):
+        o, cache = mamba2_decode(params, cfg, x[:, t : t + 1], cache)
+        outs.append(o[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention == full attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [None, 48])
+def test_chunked_attention_exact(monkeypatch, window):
+    monkeypatch.setattr(attn_mod, "CHUNK_Q_THRESHOLD", 128)
+    monkeypatch.setattr(attn_mod, "CHUNK_Q", 32)
+    cfg = tiny_cfg(attn_softcap=30.0)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 4, 128, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, 128, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2, 128, 16)), jnp.float32)
+    full = attn_mod._full_attention(cfg, q, k, v, 0.25, True, window)
+    chunked = attn_mod._chunked_attention(cfg, q, k, v, 0.25, True, window)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def test_mrope_degenerates_to_rope_for_text():
+    """Qwen2-VL property: equal (t,h,w) position streams == plain RoPE."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 4, 16, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16)).astype(jnp.int32)
+    pos3 = jnp.broadcast_to(pos[:, None], (2, 3, 16))
+    np.testing.assert_allclose(
+        np.asarray(apply_mrope(x, pos3)), np.asarray(apply_rope(x, pos)), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_rope_is_norm_preserving():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((1, 2, 8, 64)), jnp.float32)
+    pos = jnp.arange(8)[None].astype(jnp.int32)
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1), np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5
+    )
+
+
+def test_rope_relative_position_property():
+    """<RoPE(q,m), RoPE(k,n)> depends only on m-n."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.asarray([[m]], jnp.int32))
+        kn = apply_rope(k, jnp.asarray([[n]], jnp.int32))
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.2, weight_decay=0.0, warmup_steps=1)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(cfg, params, grads, opt)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip():
+    from repro.training.optimizer import clip_by_global_norm
+
+    g = {"a": jnp.ones((10,)) * 100.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    total = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert abs(total - 1.0) < 1e-5

@@ -1,0 +1,131 @@
+"""Paper algorithms: correctness (Lemma 2), convergence (Lemma 1),
+iteration-count claims (Fig 7), perforation accuracy trade (Fig 5/6)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    DeviceGraph,
+    EdgeCentricGraph,
+    IdenticalNodePlan,
+    PartitionedGraph,
+    l1_norm,
+    pagerank_barrier,
+    pagerank_barrier_edge,
+    pagerank_barrier_opt,
+    pagerank_identical,
+    pagerank_nosync,
+    pagerank_numpy,
+)
+from repro.graphs import rmat_graph
+from repro.graphs.csr import Graph
+
+THRESH = 1e-7
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(9, avg_degree=6, seed=1)
+
+
+@pytest.fixture(scope="module")
+def ref(graph):
+    pr, it = pagerank_numpy(graph, threshold=1e-12)
+    return pr
+
+
+def test_reference_is_a_distribution_fragment(graph, ref):
+    # without dangling redistribution the sum is <= 1 and stable
+    assert 0.1 < ref.sum() <= 1.0 + 1e-9
+
+
+def test_barrier_matches_sequential(graph, ref):
+    r = pagerank_barrier(DeviceGraph.from_graph(graph), threshold=THRESH)
+    assert l1_norm(r.pr, ref) < 1e-3
+    assert int(r.iterations) > 1
+
+
+def test_barrier_edge_identical_to_barrier(graph):
+    r1 = pagerank_barrier(DeviceGraph.from_graph(graph), threshold=THRESH)
+    r2 = pagerank_barrier_edge(EdgeCentricGraph.from_graph(graph), threshold=THRESH)
+    # same fixed point, same schedule → bitwise-comparable trajectories
+    assert l1_norm(r1.pr, r2.pr) < 1e-6
+    assert int(r1.iterations) == int(r2.iterations)
+
+
+def test_nosync_matches_sequential_lemma2(graph, ref):
+    pg = PartitionedGraph.from_graph(graph, p=8)
+    r = pagerank_nosync(pg, threshold=THRESH)
+    assert l1_norm(r.pr, ref) < 1e-3
+
+
+def test_nosync_fewer_iterations_fig7(graph):
+    """Paper Fig 7: No-Sync (fresher reads) converges in fewer iterations."""
+    rb = pagerank_barrier(DeviceGraph.from_graph(graph), threshold=THRESH)
+    rn = pagerank_nosync(PartitionedGraph.from_graph(graph, p=8), threshold=THRESH)
+    assert int(rn.iterations) < int(rb.iterations)
+
+
+def test_perforation_speeds_up_but_stays_close(graph, ref):
+    """Alg 5: loop perforation trades a little L1 for earlier freezing."""
+    r_opt = pagerank_barrier_opt(DeviceGraph.from_graph(graph), threshold=THRESH)
+    assert l1_norm(r_opt.pr, ref) < 1e-2  # small accuracy loss is allowed
+    r_nsopt = pagerank_nosync(PartitionedGraph.from_graph(graph, p=8), threshold=THRESH, perforate=True)
+    assert l1_norm(r_nsopt.pr, ref) < 1e-2
+
+
+def test_identical_nodes_match(graph, ref):
+    plan = IdenticalNodePlan.from_graph(graph)
+    assert plan.n_classes < graph.n  # real sharing exists on RMAT graphs
+    r = pagerank_identical(plan, threshold=THRESH)
+    assert l1_norm(r.pr, ref) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def small_graphs(draw):
+    n = draw(st.integers(8, 64))
+    m = draw(st.integers(n, 4 * n))
+    edges = draw(
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=m, max_size=m,
+        )
+    )
+    src = np.array([e[0] for e in edges], dtype=np.int32)
+    dst = np.array([e[1] for e in edges], dtype=np.int32)
+    return Graph.from_edges(n, src, dst)
+
+
+@given(small_graphs())
+def test_property_all_variants_share_fixed_point(g):
+    """Lemma 1+2 over random graphs: every variant terminates and agrees
+    with the sequential oracle."""
+    ref, _ = pagerank_numpy(g, threshold=1e-12)
+    rb = pagerank_barrier(DeviceGraph.from_graph(g), threshold=1e-9)
+    rn = pagerank_nosync(PartitionedGraph.from_graph(g, p=4), threshold=1e-9)
+    ri = pagerank_identical(IdenticalNodePlan.from_graph(g), threshold=1e-9)
+    for r in (rb, rn, ri):
+        assert np.isfinite(np.asarray(r.pr)).all()
+        assert l1_norm(r.pr, ref) < 1e-3
+
+
+@given(small_graphs(), st.integers(2, 8))
+def test_property_partition_count_invariance(g, p):
+    """The no-sync fixed point must not depend on the partitioning (the
+    paper's thread count) — Lemma 2's schedule independence."""
+    ref, _ = pagerank_numpy(g, threshold=1e-12)
+    r = pagerank_nosync(PartitionedGraph.from_graph(g, p=p), threshold=1e-9)
+    assert l1_norm(r.pr, ref) < 1e-3
+
+
+@given(small_graphs())
+def test_property_rank_positive(g):
+    rb = pagerank_barrier(DeviceGraph.from_graph(g), threshold=1e-9)
+    pr = np.asarray(rb.pr)
+    assert (pr > 0).all()
+    assert pr.sum() <= 1.0 + 1e-6
