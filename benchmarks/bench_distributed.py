@@ -26,7 +26,8 @@ _SCRIPT = textwrap.dedent(
     g = make_dataset("webStanford", scale_down=64)
     ref, _ = pagerank_numpy(g, threshold=1e-12)
     pg = PartitionedGraph.from_graph(g, p=8)
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.utils.jaxcompat import make_mesh
+    mesh = make_mesh((8,), ("data",))
     out = {"n": g.n, "m": g.m}
     for mode, k in (("barrier", 1), ("stale", 2), ("stale", 4), ("stale", 8)):
         t0 = time.perf_counter()

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# One entry point that must stay green: tier-1 tests + a Pallas No-Sync smoke.
+# Usage: scripts/check.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q "$@"
+
+echo "== smoke: pallas_nosync launcher =="
+python -m repro.launch.pagerank_run --variant pallas_nosync --scale-down 2048
+
+echo "check.sh: all green"

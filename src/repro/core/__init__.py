@@ -1,11 +1,25 @@
-"""The paper's primary contribution: non-blocking PageRank variants,
-their distributed (shard_map) forms, and the fault-tolerance runtime."""
-from repro.core.pagerank import (
+"""The paper's primary contribution: non-blocking PageRank variants on one
+convergence engine (solver.py), their distributed (shard_map) forms, and the
+fault-tolerance runtime.  Variants are registry entries — see
+``repro.core.solver.list_variants()``."""
+from repro.core.solver import (
     DEFAULT_DAMPING,
+    EngineState,
+    PageRankResult,
+    Variant,
+    barrier_schedule,
+    get_variant,
+    list_variants,
+    nosync_schedule,
+    perforation,
+    register_variant,
+    solve,
+    solve_variant,
+)
+from repro.core.pagerank import (
     DeviceGraph,
     EdgeCentricGraph,
     IdenticalNodePlan,
-    PageRankResult,
     PartitionedGraph,
     l1_norm,
     pagerank_barrier,
@@ -22,16 +36,26 @@ __all__ = [
     "DEFAULT_DAMPING",
     "DeviceGraph",
     "EdgeCentricGraph",
+    "EngineState",
     "IdenticalNodePlan",
     "PageRankResult",
     "PartitionedGraph",
+    "Variant",
+    "barrier_schedule",
+    "get_variant",
     "l1_norm",
+    "list_variants",
+    "nosync_schedule",
     "pagerank_barrier",
     "pagerank_barrier_edge",
     "pagerank_barrier_opt",
     "pagerank_identical",
     "pagerank_nosync",
     "pagerank_numpy",
+    "perforation",
+    "register_variant",
+    "solve",
+    "solve_variant",
     "distributed_pagerank",
     "FaultPlan",
     "SimResult",

@@ -27,9 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
 from repro.core.pagerank import DEFAULT_DAMPING, PageRankResult, PartitionedGraph
+from repro.utils.jaxcompat import shard_map
 
 
 def _sweep(pr_full, local, srcs, dsts, emask, inv_out, base, d, vp, offset):

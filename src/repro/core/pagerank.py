@@ -1,49 +1,70 @@
-"""PageRank variants from the paper, as jit-able JAX solvers.
+"""PageRank variants from the paper, as declarative entries on the shared
+convergence engine (:mod:`repro.core.solver`).
 
-Variant map (paper §4 → here):
+Engine/registry layout — each variant is a **sweep** (how Eq. (1) is applied)
+plus a **schedule** (``barrier`` = Jacobi, ``nosync`` = in-iteration fresh
+reads) plus optional **transforms** (Alg 5 perforation); the single
+``jax.lax.while_loop`` lives in :func:`repro.core.solver.solve`.
 
-* ``barrier``        — Alg 1: Jacobi power iteration; the two barrier phases of
-                       the pthread version collapse into the data dependence of
-                       one ``while_loop`` body (prev→new arrays).
-* ``barrier_edge``   — Alg 2: 3-phase edge-centric; phase I is a real scatter of
-                       per-edge contributions through ``offsetList`` into a
-                       contribution list, phase II a gather/segment-sum.
-* ``nosync``         — Alg 3: barrier-free. TPU adaptation: partitions are swept
-                       sequentially *within* an iteration, each reading the
-                       freshest ranks (single pr array, no prev array) — a
-                       deterministic schedule drawn from the set of admissible
-                       async executions (Lemma 2 fixed point is schedule-
-                       independent). Thread-level convergence: a converged
-                       partition skips its sweep.
-* ``*_opt``          — Alg 5 loop perforation: a vertex whose rank moved by
-                       ``0 < |Δ| < threshold·1e-5`` is frozen for the rest of
-                       the run.
-* ``*_identical``    — STIC-D identical-node optimization: vertices with equal
-                       in-neighbour sets share one computation.
+Variant map (paper §4 → registry name → composition):
 
-All solvers return ``PageRankResult(pr, iterations, err)`` and share the exact
-fixed point of :func:`pagerank_numpy` (the sequential oracle) — the property
-tests assert this (Lemma 2).
+* ``barrier``           — Alg 1: vertex-centric sweep, barrier schedule.
+* ``barrier_edge``      — Alg 2: 3-phase edge-centric sweep (phase I scatters
+                          per-edge contributions through ``offsetList``,
+                          phase II gathers/segment-sums), barrier schedule.
+* ``barrier_opt``       — Alg 1 + perforation transform.
+* ``barrier_identical`` — STIC-D identical-node sweep (vertices with equal
+                          in-neighbour sets share one computation), barrier.
+* ``nosync``            — Alg 3: partition sweep on the nosync schedule —
+                          partitions swept sequentially *within* an iteration,
+                          each reading the freshest ranks (single pr array); a
+                          deterministic member of the admissible async
+                          executions (Lemma 2: fixed point is schedule-
+                          independent).  ``thread_level`` termination per
+                          Alg 3 l.17-19 is the schedule's observed-error skip.
+* ``nosync_opt``        — Alg 3 + Alg 5 perforation transform.
+* ``pallas``/``pallas_nosync`` — the blocked Pallas SpMV sweep on either
+                          schedule; registered from ``repro.kernels.spmv.ops``.
+
+Every variant accepts ``handle_dangling`` and, when set, converges to the
+same dangling-redistributed fixed point as :func:`pagerank_numpy` (the
+sequential oracle) — the registry round-trip tests assert this (Lemma 2).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.csr import Graph
+from repro.core.solver import (
+    DEFAULT_DAMPING,
+    PageRankResult,
+    barrier_schedule,
+    nosync_schedule,
+    perforation,
+    register_variant,
+    solve,
+)
+from repro.graphs.csr import Graph, inv_out_and_dangling
 
-DEFAULT_DAMPING = 0.85
-
-
-class PageRankResult(NamedTuple):
-    pr: jax.Array
-    iterations: jax.Array
-    err: jax.Array
+__all__ = [
+    "DEFAULT_DAMPING",
+    "PageRankResult",
+    "DeviceGraph",
+    "EdgeCentricGraph",
+    "PartitionedGraph",
+    "IdenticalNodePlan",
+    "pagerank_numpy",
+    "l1_norm",
+    "pagerank_barrier",
+    "pagerank_barrier_edge",
+    "pagerank_barrier_opt",
+    "pagerank_nosync",
+    "pagerank_identical",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -58,19 +79,18 @@ class DeviceGraph:
     n: int
     src: jax.Array  # (m,) int32 — sorted by dst
     dst: jax.Array  # (m,) int32
-    inv_out: jax.Array  # (n,) — 1/outdeg, 0 for dangling (paper drops dangling mass)
+    inv_out: jax.Array  # (n,) — 1/outdeg, 0 for dangling
     dangling: jax.Array  # (n,) float mask of outdeg==0 vertices
 
     @classmethod
     def from_graph(cls, g: Graph, dtype=jnp.float32) -> "DeviceGraph":
-        out = g.out_degree.astype(np.float64)
-        inv = np.where(out > 0, 1.0 / np.maximum(out, 1), 0.0)
+        inv, dang = inv_out_and_dangling(g.out_degree)
         return cls(
             n=g.n,
             src=jnp.asarray(g.src),
             dst=jnp.asarray(g.dst),
             inv_out=jnp.asarray(inv, dtype=dtype),
-            dangling=jnp.asarray((g.out_degree == 0).astype(np.float64), dtype=dtype),
+            dangling=jnp.asarray(dang, dtype=dtype),
         )
 
 
@@ -91,8 +111,7 @@ class EdgeCentricGraph:
         out_ptr, _, edge_slot = g.out_csr()
         # src id per edge in src-sorted order
         src_ids = np.repeat(np.arange(g.n, dtype=np.int32), np.diff(out_ptr))
-        out = g.out_degree.astype(np.float64)
-        inv = np.where(out > 0, 1.0 / np.maximum(out, 1), 0.0)
+        inv, dang = inv_out_and_dangling(g.out_degree)
         return cls(
             n=g.n,
             m=g.m,
@@ -100,7 +119,7 @@ class EdgeCentricGraph:
             edge_slot=jnp.asarray(edge_slot),
             dst=jnp.asarray(g.dst),
             inv_out=jnp.asarray(inv, dtype=dtype),
-            dangling=jnp.asarray((g.out_degree == 0).astype(np.float64), dtype=dtype),
+            dangling=jnp.asarray(dang, dtype=dtype),
         )
 
 
@@ -140,11 +159,7 @@ class PartitionedGraph:
             src_pad[i, :k] = g.src[e0:e1]
             dst_local[i, :k] = g.dst[e0:e1] - i * vp
             emask[i, :k] = 1.0
-        out = np.zeros(n_pad, dtype=np.float64)
-        out[: g.n] = g.out_degree
-        inv = np.where(out > 0, 1.0 / np.maximum(out, 1), 0.0)
-        dang = np.zeros(n_pad, dtype=np.float64)
-        dang[: g.n] = g.out_degree == 0
+        inv, dang = inv_out_and_dangling(g.out_degree, n_pad)
         return cls(
             n=g.n,
             p=p,
@@ -194,32 +209,31 @@ def l1_norm(pr_a, pr_b) -> float:
 
 
 # ---------------------------------------------------------------------------
-# Alg 1 — Barrier (Jacobi)
+# Alg 1 — Barrier (Jacobi) and Alg 5 — Barrier-Opt (perforated Jacobi)
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("n", "max_iter", "handle_dangling"))
-def _barrier_impl(src, dst, inv_out, dangling, *, n, d, threshold, max_iter, handle_dangling):
+@functools.partial(
+    jax.jit, static_argnames=("n", "max_iter", "handle_dangling", "perforate")
+)
+def _barrier_impl(src, dst, inv_out, dangling, *, n, d, threshold, max_iter,
+                  handle_dangling, perforate):
     dtype = inv_out.dtype
     base = jnp.asarray((1.0 - d) / n, dtype)
 
-    def body(state):
-        pr, it, _ = state
+    def sweep(pr):
         contrib = (pr * inv_out)[src]
         acc = jax.ops.segment_sum(contrib, dst, num_segments=n, indices_are_sorted=True)
         new = base + d * acc
         if handle_dangling:
             new = new + d * jnp.sum(pr * dangling) / n
-        err = jnp.max(jnp.abs(new - pr))
-        return new, it + 1, err
+        return new
 
-    def cond(state):
-        _, it, err = state
-        return (err > threshold) & (it < max_iter)
-
-    init = (jnp.full((n,), 1.0 / n, dtype), jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, dtype))
-    pr, it, err = jax.lax.while_loop(cond, body, init)
-    return PageRankResult(pr, it, err)
+    transforms = (perforation(threshold),) if perforate else ()
+    step = barrier_schedule(sweep, transforms)
+    pr0 = jnp.full((n,), 1.0 / n, dtype)
+    return solve(step, pr0, threshold=threshold, max_iter=max_iter,
+                 track_frozen=perforate)
 
 
 def pagerank_barrier(
@@ -232,7 +246,21 @@ def pagerank_barrier(
     return _barrier_impl(
         dg.src, dg.dst, dg.inv_out, dg.dangling,
         n=dg.n, d=d, threshold=threshold, max_iter=max_iter,
-        handle_dangling=handle_dangling,
+        handle_dangling=handle_dangling, perforate=False,
+    )
+
+
+def pagerank_barrier_opt(
+    dg: DeviceGraph,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 10_000,
+    handle_dangling: bool = False,
+) -> PageRankResult:
+    return _barrier_impl(
+        dg.src, dg.dst, dg.inv_out, dg.dangling,
+        n=dg.n, d=d, threshold=threshold, max_iter=max_iter,
+        handle_dangling=handle_dangling, perforate=True,
     )
 
 
@@ -241,13 +269,13 @@ def pagerank_barrier(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("n", "m", "max_iter"))
-def _barrier_edge_impl(src_by_src, edge_slot, dst, inv_out, *, n, m, d, threshold, max_iter):
+@functools.partial(jax.jit, static_argnames=("n", "m", "max_iter", "handle_dangling"))
+def _barrier_edge_impl(src_by_src, edge_slot, dst, inv_out, dangling,
+                       *, n, m, d, threshold, max_iter, handle_dangling):
     dtype = inv_out.dtype
     base = jnp.asarray((1.0 - d) / n, dtype)
 
-    def body(state):
-        pr, it, _ = state
+    def sweep(pr):
         # Phase I: every vertex scatters its contribution into its out-edges'
         # slots of the (dst-ordered) contribution list — paper Alg 2 l.9-12.
         contrib_by_src = (pr * inv_out)[src_by_src]
@@ -255,17 +283,14 @@ def _barrier_edge_impl(src_by_src, edge_slot, dst, inv_out, *, n, m, d, threshol
         # Phase II: gather per destination — paper Alg 2 l.16-23.
         acc = jax.ops.segment_sum(contribution_list, dst, num_segments=n, indices_are_sorted=True)
         new = base + d * acc
-        err = jnp.max(jnp.abs(new - pr))
-        # Phase III (error fold + swap) is the loop-carried state update.
-        return new, it + 1, err
+        if handle_dangling:
+            new = new + d * jnp.sum(pr * dangling) / n
+        # Phase III (error fold + swap) is the engine's loop-carried update.
+        return new
 
-    def cond(state):
-        _, it, err = state
-        return (err > threshold) & (it < max_iter)
-
-    init = (jnp.full((n,), 1.0 / n, dtype), jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, dtype))
-    pr, it, err = jax.lax.while_loop(cond, body, init)
-    return PageRankResult(pr, it, err)
+    step = barrier_schedule(sweep)
+    pr0 = jnp.full((n,), 1.0 / n, dtype)
+    return solve(step, pr0, threshold=threshold, max_iter=max_iter)
 
 
 def pagerank_barrier_edge(
@@ -273,10 +298,12 @@ def pagerank_barrier_edge(
     d: float = DEFAULT_DAMPING,
     threshold: float = 1e-8,
     max_iter: int = 10_000,
+    handle_dangling: bool = False,
 ) -> PageRankResult:
     return _barrier_edge_impl(
-        eg.src_by_src, eg.edge_slot, eg.dst, eg.inv_out,
+        eg.src_by_src, eg.edge_slot, eg.dst, eg.inv_out, eg.dangling,
         n=eg.n, m=eg.m, d=d, threshold=threshold, max_iter=max_iter,
+        handle_dangling=handle_dangling,
     )
 
 
@@ -287,65 +314,42 @@ def pagerank_barrier_edge(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "p", "vp", "n_pad", "max_iter", "perforate", "thread_level"),
+    static_argnames=("n", "p", "vp", "n_pad", "max_iter", "perforate",
+                     "thread_level", "handle_dangling"),
 )
 def _nosync_impl(
-    src_pad, dst_local, emask, inv_out,
+    src_pad, dst_local, emask, inv_out, dangling,
     *, n, p, vp, n_pad, d, threshold, max_iter, perforate, thread_level,
+    handle_dangling,
 ):
     dtype = inv_out.dtype
     base = jnp.asarray((1.0 - d) / n, dtype)
-    perf_cut = jnp.asarray(threshold * 1e-5, dtype)
 
-    def sweep_partition(i, carry):
-        pr, frozen, perr = carry
+    def sweep(i, pr, dmass):
+        srcs = jax.lax.dynamic_slice_in_dim(src_pad, i, 1, 0)[0]
+        dsts = jax.lax.dynamic_slice_in_dim(dst_local, i, 1, 0)[0]
+        msk = jax.lax.dynamic_slice_in_dim(emask, i, 1, 0)[0]
+        contrib = (pr * inv_out)[srcs] * msk
+        acc = jax.ops.segment_sum(contrib, dsts, num_segments=vp, indices_are_sorted=True)
+        return base + d * acc + dmass
 
-        def do(carry):
-            pr, frozen, perr = carry
-            srcs = jax.lax.dynamic_slice_in_dim(src_pad, i, 1, 0)[0]
-            dsts = jax.lax.dynamic_slice_in_dim(dst_local, i, 1, 0)[0]
-            msk = jax.lax.dynamic_slice_in_dim(emask, i, 1, 0)[0]
-            old = jax.lax.dynamic_slice_in_dim(pr, i * vp, vp)
-            contrib = (pr * inv_out)[srcs] * msk
-            acc = jax.ops.segment_sum(contrib, dsts, num_segments=vp, indices_are_sorted=True)
-            new = base + d * acc
-            if perforate:
-                # Alg 5: freeze vertices whose delta is tiny but nonzero.
-                fr = jax.lax.dynamic_slice_in_dim(frozen, i * vp, vp)
-                delta = jnp.abs(new - old)
-                fr_new = fr | ((delta > 0) & (delta < perf_cut))
-                new = jnp.where(fr, old, new)
-                frozen = jax.lax.dynamic_update_slice_in_dim(frozen, fr_new, i * vp, 0)
-            err_i = jnp.max(jnp.abs(new - old))
-            pr = jax.lax.dynamic_update_slice_in_dim(pr, new, i * vp, 0)
-            perr = perr.at[i].set(err_i)
-            return pr, frozen, perr
+    def dangling_mass(pr):
+        # snapshot at iteration start (not per partition) — same fixed point
+        # (Lemma 2: pr is stationary there), one O(n) reduction per iteration.
+        if handle_dangling:
+            return d * jnp.sum(pr * dangling) / n
+        return jnp.asarray(0.0, dtype)
 
-        # Thread-level convergence (paper Alg 3 l.17-19): a thread exits only
-        # when it OBSERVES every thread's error below threshold — it does NOT
-        # stop sweeping on its own error alone. (Skipping on the local error
-        # freezes partitions whose inputs change later and converges to a
-        # wrong fixed point — found by the hypothesis property tests; it is
-        # the same phenomenon the paper reports for No-Sync-Edge §4.4.)
-        # The observation is the outer while condition (`thread_level` is
-        # termination semantics, not a work-skip); every live iteration
-        # sweeps every partition.
-        return do(carry)
-
-    def body(state):
-        pr, frozen, perr, it = state
-        pr, frozen, perr = jax.lax.fori_loop(0, p, sweep_partition, (pr, frozen, perr))
-        return pr, frozen, perr, it + 1
-
-    def cond(state):
-        _, _, perr, it = state
-        return (jnp.max(perr) > threshold) & (it < max_iter)
-
+    transforms = (perforation(threshold),) if perforate else ()
+    step = nosync_schedule(
+        sweep, p=p, vp=vp, threshold=threshold,
+        transforms=transforms, thread_level=thread_level,
+        prologue=dangling_mass,
+    )
     pr0 = jnp.full((n_pad,), 1.0 / n, dtype)
-    frozen0 = jnp.zeros((n_pad,), jnp.bool_)
-    perr0 = jnp.full((p,), jnp.inf, dtype)
-    pr, _, perr, it = jax.lax.while_loop(cond, body, (pr0, frozen0, perr0, jnp.asarray(0, jnp.int32)))
-    return PageRankResult(pr[:n], it, jnp.max(perr))
+    r = solve(step, pr0, n_units=p, threshold=threshold, max_iter=max_iter,
+              track_frozen=perforate)
+    return PageRankResult(r.pr[:n], r.iterations, r.err)
 
 
 def pagerank_nosync(
@@ -355,59 +359,14 @@ def pagerank_nosync(
     max_iter: int = 10_000,
     perforate: bool = False,
     thread_level: bool = True,
+    handle_dangling: bool = False,
 ) -> PageRankResult:
     return _nosync_impl(
-        pg.src_pad, pg.dst_local, pg.emask, pg.inv_out,
+        pg.src_pad, pg.dst_local, pg.emask, pg.inv_out, pg.dangling,
         n=pg.n, p=pg.p, vp=pg.vp, n_pad=pg.n_pad,
         d=d, threshold=threshold, max_iter=max_iter,
         perforate=perforate, thread_level=thread_level,
-    )
-
-
-# ---------------------------------------------------------------------------
-# Alg 5 applied to Barrier — Barrier-Opt (perforated Jacobi)
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(jax.jit, static_argnames=("n", "max_iter"))
-def _barrier_opt_impl(src, dst, inv_out, *, n, d, threshold, max_iter):
-    dtype = inv_out.dtype
-    base = jnp.asarray((1.0 - d) / n, dtype)
-    perf_cut = jnp.asarray(threshold * 1e-5, dtype)
-
-    def body(state):
-        pr, frozen, it, _ = state
-        contrib = (pr * inv_out)[src]
-        acc = jax.ops.segment_sum(contrib, dst, num_segments=n, indices_are_sorted=True)
-        new = base + d * acc
-        delta = jnp.abs(new - pr)
-        frozen_new = frozen | ((delta > 0) & (delta < perf_cut))
-        new = jnp.where(frozen, pr, new)
-        err = jnp.max(jnp.abs(new - pr))
-        return new, frozen_new, it + 1, err
-
-    def cond(state):
-        _, _, it, err = state
-        return (err > threshold) & (it < max_iter)
-
-    init = (
-        jnp.full((n,), 1.0 / n, dtype),
-        jnp.zeros((n,), jnp.bool_),
-        jnp.asarray(0, jnp.int32),
-        jnp.asarray(jnp.inf, dtype),
-    )
-    pr, _, it, err = jax.lax.while_loop(cond, body, init)
-    return PageRankResult(pr, it, err)
-
-
-def pagerank_barrier_opt(
-    dg: DeviceGraph,
-    d: float = DEFAULT_DAMPING,
-    threshold: float = 1e-8,
-    max_iter: int = 10_000,
-) -> PageRankResult:
-    return _barrier_opt_impl(
-        dg.src, dg.dst, dg.inv_out, n=dg.n, d=d, threshold=threshold, max_iter=max_iter
+        handle_dangling=handle_dangling,
     )
 
 
@@ -431,6 +390,7 @@ class IdenticalNodePlan:
     src: jax.Array  # edges into representatives, dst-sorted
     dst_class: jax.Array  # class id per kept edge
     inv_out: jax.Array
+    dangling: jax.Array
 
     @classmethod
     def from_graph(cls, g: Graph, dtype=jnp.float32) -> "IdenticalNodePlan":
@@ -441,8 +401,7 @@ class IdenticalNodePlan:
             if rep[cls_of[u]] < 0:
                 rep[cls_of[u]] = u
         keep = rep[cls_of[g.dst]] == g.dst  # only edges into representatives
-        out = g.out_degree.astype(np.float64)
-        inv = np.where(out > 0, 1.0 / np.maximum(out, 1), 0.0)
+        inv, dang = inv_out_and_dangling(g.out_degree)
         return cls(
             n=g.n,
             n_classes=n_classes,
@@ -450,29 +409,31 @@ class IdenticalNodePlan:
             src=jnp.asarray(g.src[keep]),
             dst_class=jnp.asarray(cls_of[g.dst[keep]].astype(np.int32)),
             inv_out=jnp.asarray(inv, dtype=dtype),
+            dangling=jnp.asarray(dang, dtype=dtype),
         )
 
 
-@functools.partial(jax.jit, static_argnames=("n", "n_classes", "max_iter"))
-def _identical_impl(cls_of, src, dst_class, inv_out, *, n, n_classes, d, threshold, max_iter):
+@functools.partial(
+    jax.jit, static_argnames=("n", "n_classes", "max_iter", "handle_dangling")
+)
+def _identical_impl(cls_of, src, dst_class, inv_out, dangling,
+                    *, n, n_classes, d, threshold, max_iter, handle_dangling):
     dtype = inv_out.dtype
     base = jnp.asarray((1.0 - d) / n, dtype)
 
-    def body(state):
-        pr, it, _ = state
+    def sweep(pr):
         contrib = (pr * inv_out)[src]
         acc_cls = jax.ops.segment_sum(contrib, dst_class, num_segments=n_classes)
         new = base + d * acc_cls[cls_of]  # one computation per class, broadcast
-        err = jnp.max(jnp.abs(new - pr))
-        return new, it + 1, err
+        if handle_dangling:
+            # dangling mass is uniform across vertices, so identical-in-
+            # neighbour classes stay identical under redistribution.
+            new = new + d * jnp.sum(pr * dangling) / n
+        return new
 
-    def cond(state):
-        _, it, err = state
-        return (err > threshold) & (it < max_iter)
-
-    init = (jnp.full((n,), 1.0 / n, dtype), jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, dtype))
-    pr, it, err = jax.lax.while_loop(cond, body, init)
-    return PageRankResult(pr, it, err)
+    step = barrier_schedule(sweep)
+    pr0 = jnp.full((n,), 1.0 / n, dtype)
+    return solve(step, pr0, threshold=threshold, max_iter=max_iter)
 
 
 def pagerank_identical(
@@ -480,8 +441,72 @@ def pagerank_identical(
     d: float = DEFAULT_DAMPING,
     threshold: float = 1e-8,
     max_iter: int = 10_000,
+    handle_dangling: bool = False,
 ) -> PageRankResult:
     return _identical_impl(
-        plan.cls_of, plan.src, plan.dst_class, plan.inv_out,
-        n=plan.n, n_classes=plan.n_classes, d=d, threshold=threshold, max_iter=max_iter,
+        plan.cls_of, plan.src, plan.dst_class, plan.inv_out, plan.dangling,
+        n=plan.n, n_classes=plan.n_classes, d=d, threshold=threshold,
+        max_iter=max_iter, handle_dangling=handle_dangling,
     )
+
+
+# ---------------------------------------------------------------------------
+# Registry entries — the declarative form of the variants above
+# ---------------------------------------------------------------------------
+
+
+def _run_kw(kw: dict) -> dict:
+    """Solver kwargs every run fn understands (drops build-only opts)."""
+    return {k: kw[k] for k in ("d", "threshold", "max_iter", "handle_dangling")
+            if k in kw}
+
+
+def _sequential_run(g, **kw):
+    pr, it = pagerank_numpy(g, **_run_kw(kw))
+    return PageRankResult(pr, it, np.asarray(0.0))
+
+
+register_variant(
+    "sequential", build=lambda g, **_: g, run=_sequential_run,
+    description="numpy float64 Jacobi oracle (paper baseline)",
+)
+register_variant(
+    "barrier",
+    build=lambda g, **_: DeviceGraph.from_graph(g),
+    run=lambda b, **kw: pagerank_barrier(b, **_run_kw(kw)),
+    description="Alg 1: Jacobi power iteration (vertex-centric)",
+)
+register_variant(
+    "barrier_edge",
+    build=lambda g, **_: EdgeCentricGraph.from_graph(g),
+    run=lambda b, **kw: pagerank_barrier_edge(b, **_run_kw(kw)),
+    description="Alg 2: 3-phase edge-centric scatter/gather",
+)
+register_variant(
+    "barrier_opt",
+    build=lambda g, **_: DeviceGraph.from_graph(g),
+    run=lambda b, **kw: pagerank_barrier_opt(b, **_run_kw(kw)),
+    description="Alg 1 + Alg 5 loop perforation",
+)
+register_variant(
+    "barrier_identical",
+    build=lambda g, **_: IdenticalNodePlan.from_graph(g),
+    run=lambda b, **kw: pagerank_identical(b, **_run_kw(kw)),
+    description="STIC-D identical-node sharing on the barrier schedule",
+)
+register_variant(
+    "nosync",
+    build=lambda g, threads=56, **_: PartitionedGraph.from_graph(g, p=threads),
+    run=lambda b, thread_level=True, **kw: pagerank_nosync(
+        b, thread_level=thread_level, **_run_kw(kw)),
+    description="Alg 3: barrier-free fresh-read partition sweeps",
+    options=("thread_level",),
+)
+register_variant(
+    "nosync_opt",
+    build=lambda g, threads=56, **_: PartitionedGraph.from_graph(g, p=threads),
+    run=lambda b, thread_level=True, **kw: pagerank_nosync(
+        b, perforate=True, thread_level=thread_level, **_run_kw(kw)),
+    description="Alg 3 + Alg 5 loop perforation",
+    options=("thread_level",),
+)

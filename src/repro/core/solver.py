@@ -1,0 +1,284 @@
+"""Single convergence engine + variant registry for every PageRank solver.
+
+The paper's variants differ along exactly two orthogonal axes (this is the
+Kollias/Lakhotia factoring — chaotic-relaxation *schedules* are independent of
+the *sweep* kernel that applies Eq. (1)):
+
+* the **sweep**: how one unit of rank propagation is computed (vertex-centric
+  segment-sum, edge-centric scatter/gather, STIC-D class sharing, blocked
+  Pallas SpMV, ...);
+* the **schedule**: when a sweep observes other units' writes — ``barrier``
+  (Jacobi: every read sees the previous iteration) or ``nosync`` (Gauss–
+  Seidel-style: units are swept in order within an iteration and read the
+  freshest ranks; the TPU-deterministic member of the paper's admissible
+  asynchronous executions, whose fixed point is schedule-independent by
+  Lemma 2).
+
+Optional **transforms** (loop perforation, Alg 5) post-process each proposed
+update, and a **stop** rule (global threshold + optional thread-level
+observed-error termination, Alg 3 l.17-19) closes the loop.  :func:`solve`
+owns the single ``jax.lax.while_loop``; no variant hand-rolls its own.
+
+The module also hosts the **variant registry**: each paper variant registers a
+``build`` (host graph -> device bundle) and ``run`` (bundle -> result) pair,
+so launch scripts, benchmarks, and tests enumerate variants instead of
+hard-coding them, and new variants (distributed stale-read modes, perforated
+Pallas, ...) are one ``register_variant`` call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_DAMPING = 0.85
+
+
+class PageRankResult(NamedTuple):
+    pr: jax.Array
+    iterations: jax.Array
+    err: jax.Array
+
+
+class EngineState(NamedTuple):
+    """Loop-carried state of the convergence engine.
+
+    ``pr`` may be any layout (flat vector, padded vector, blocked 2-D) — the
+    engine never indexes it, only the schedule's step function does.  ``perr``
+    holds the last *observed* error per schedule unit (1 for barrier, p for
+    no-sync partitions); the stop rule reduces over it.
+    """
+
+    pr: jax.Array
+    frozen: jax.Array  # same shape as pr — perforation freeze mask
+    perr: jax.Array  # (n_units,) last observed per-unit error
+    it: jax.Array  # int32 iteration counter
+
+
+# A transform post-processes one proposed update: (old, new, frozen) ->
+# (new', frozen').  Applied inside the schedule, per unit.
+Transform = Callable[[jax.Array, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]
+
+
+def perforation(threshold: float) -> Transform:
+    """Alg 5 loop perforation: freeze vertices whose delta is tiny but nonzero."""
+
+    def transform(old, new, frozen):
+        cut = jnp.asarray(threshold * 1e-5, new.dtype)
+        delta = jnp.abs(new - old)
+        frozen_new = frozen | ((delta > 0) & (delta < cut))
+        return jnp.where(frozen, old, new), frozen_new
+
+    return transform
+
+
+def _apply_transforms(transforms: Sequence[Transform], old, new, frozen):
+    for t in transforms:
+        new, frozen = t(old, new, frozen)
+    return new, frozen
+
+
+# ---------------------------------------------------------------------------
+# Schedules — combinators turning a sweep fn into one engine step
+# ---------------------------------------------------------------------------
+
+
+def barrier_schedule(sweep: Callable[[jax.Array], jax.Array],
+                     transforms: Sequence[Transform] = ()) -> Callable:
+    """Jacobi: ``sweep(pr)`` proposes a full replacement computed from the
+    previous iterate; the data dependence of the while-loop body *is* the
+    barrier (paper Alg 1).  One schedule unit."""
+
+    def step(state: EngineState) -> EngineState:
+        new = sweep(state.pr)
+        new, frozen = _apply_transforms(transforms, state.pr, new, state.frozen)
+        err = jnp.max(jnp.abs(new - state.pr))
+        return EngineState(new, frozen, jnp.full_like(state.perr, err), state.it + 1)
+
+    return step
+
+
+def nosync_schedule(
+    sweep: Callable[..., jax.Array],
+    *,
+    p: int,
+    vp: int,
+    threshold: float,
+    transforms: Sequence[Transform] = (),
+    thread_level: bool = False,
+    prologue: Callable[[jax.Array], Any] | None = None,
+) -> Callable:
+    """No-Sync (paper Alg 3): partitions are swept **in order within an
+    iteration**, each reading the freshest ranks (single ``pr`` array, no
+    prev/new swap).  ``sweep(i, pr)`` returns partition ``i``'s proposed
+    ``(vp,)`` block from the current full vector.
+
+    ``prologue(pr)``, when given, computes once-per-iteration context shared
+    by every partition sweep — e.g. the dangling-mass snapshot, which would
+    otherwise cost a full-vector reduction *per partition* — and the sweep is
+    called as ``sweep(i, pr, ctx)`` instead.  Iteration-level freshness keeps
+    the fixed point unchanged (Lemma 2: it is stationary there).
+
+    ``thread_level`` wires the paper's thread-level convergence (Alg 3
+    l.17-19) as *termination semantics*: a unit skips its sweep only when it
+    OBSERVES every unit's last error at or below threshold — never on its own
+    error alone (skipping on the local error freezes partitions whose inputs
+    change later and converges to a wrong fixed point; the paper reports the
+    same phenomenon for No-Sync-Edge §4.4).  Since the engine's stop rule
+    fires on the same observation, this only sheds the tail of the final
+    iteration and cannot change the fixed point.
+    """
+
+    def step(state: EngineState) -> EngineState:
+        ctx = prologue(state.pr) if prologue is not None else None
+
+        def sweep_partition(i, carry):
+            def do(carry):
+                pr, frozen, perr = carry
+                old = jax.lax.dynamic_slice_in_dim(pr, i * vp, vp)
+                new = sweep(i, pr) if prologue is None else sweep(i, pr, ctx)
+                if transforms:  # frozen is a zero-size stub otherwise
+                    fr = jax.lax.dynamic_slice_in_dim(frozen, i * vp, vp)
+                    new, fr = _apply_transforms(transforms, old, new, fr)
+                    frozen = jax.lax.dynamic_update_slice_in_dim(frozen, fr, i * vp, 0)
+                pr = jax.lax.dynamic_update_slice_in_dim(pr, new, i * vp, 0)
+                perr = perr.at[i].set(jnp.max(jnp.abs(new - old)))
+                return pr, frozen, perr
+
+            if thread_level:
+                _, _, perr = carry
+                return jax.lax.cond(jnp.max(perr) > threshold, do, lambda c: c, carry)
+            return do(carry)
+
+        pr, frozen, perr = jax.lax.fori_loop(
+            0, p, sweep_partition, (state.pr, state.frozen, state.perr)
+        )
+        return EngineState(pr, frozen, perr, state.it + 1)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# The engine: the one while_loop every variant shares
+# ---------------------------------------------------------------------------
+
+
+def solve(
+    step: Callable[[EngineState], EngineState],
+    pr0: jax.Array,
+    *,
+    n_units: int = 1,
+    threshold: float,
+    max_iter: int,
+    track_frozen: bool = False,
+) -> PageRankResult:
+    """Iterate ``step`` until every observed unit error is at or below
+    ``threshold`` (or ``max_iter``).  Returns the rank array in the solver's
+    own layout — callers strip padding / reshape.
+
+    ``track_frozen`` allocates the perforation freeze mask; leave it off for
+    transform-free variants so the while-loop carry holds a zero-size stub
+    instead of a full-size boolean array."""
+    dtype = pr0.dtype
+
+    def cond(state: EngineState):
+        return (jnp.max(state.perr) > threshold) & (state.it < max_iter)
+
+    init = EngineState(
+        pr=pr0,
+        frozen=jnp.zeros(pr0.shape if track_frozen else (0,), jnp.bool_),
+        perr=jnp.full((n_units,), jnp.inf, dtype),
+        it=jnp.asarray(0, jnp.int32),
+    )
+    final = jax.lax.while_loop(cond, step, init)
+    return PageRankResult(final.pr, final.it, jnp.max(final.perr))
+
+
+# ---------------------------------------------------------------------------
+# Variant registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """A registered PageRank variant.
+
+    ``build(g, **opts)`` turns a host :class:`repro.graphs.csr.Graph` into the
+    variant's device bundle (opts it does not use are ignored); ``run(bundle,
+    d=..., threshold=..., max_iter=..., handle_dangling=..., **opts)`` solves
+    and returns a :class:`PageRankResult`.  ``options`` names extra keyword
+    options this variant honours beyond the transport set.
+    """
+
+    name: str
+    build: Callable[..., Any]
+    run: Callable[..., PageRankResult]
+    description: str = ""
+    options: tuple[str, ...] = ()
+
+
+_REGISTRY: dict[str, Variant] = {}
+
+# Options the launcher/benchmarks pass uniformly; variants that don't need
+# one ignore it (e.g. --threads with a barrier variant), mirroring the CLI.
+_TRANSPORT_OPTS = frozenset({"threads", "block", "tile_cap", "interpret"})
+
+
+def register_variant(name: str, build: Callable, run: Callable,
+                     description: str = "",
+                     options: tuple[str, ...] = ()) -> Variant:
+    v = Variant(name=name, build=build, run=run, description=description,
+                options=options)
+    _REGISTRY[name] = v
+    return v
+
+
+def _ensure_registered() -> None:
+    # Variants self-register at import; pull in every module that defines one.
+    import repro.core.pagerank  # noqa: F401
+    import repro.kernels.spmv.ops  # noqa: F401
+
+
+def list_variants() -> tuple[str, ...]:
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_variant(name: str) -> Variant:
+    _ensure_registered()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown PageRank variant {name!r}; registered: {list_variants()}"
+        ) from None
+
+
+def solve_variant(
+    name: str,
+    g,
+    *,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 10_000,
+    handle_dangling: bool = False,
+    **opts,
+) -> PageRankResult:
+    """Build the bundle for ``name`` and solve — the one-call entry point used
+    by the launcher, benchmarks, and the registry round-trip tests.
+
+    Unknown options raise instead of being silently dropped — a typo'd or
+    unsupported option (e.g. ``perforate`` on ``nosync``: use ``nosync_opt``)
+    must not let the caller believe it was applied."""
+    v = get_variant(name)
+    unknown = set(opts) - _TRANSPORT_OPTS - set(v.options)
+    if unknown:
+        raise TypeError(
+            f"variant {name!r} does not accept option(s) {sorted(unknown)}; "
+            f"accepted: {sorted(_TRANSPORT_OPTS | set(v.options))}"
+        )
+    bundle = v.build(g, **opts)
+    return v.run(bundle, d=d, threshold=threshold, max_iter=max_iter,
+                 handle_dangling=handle_dangling, **opts)

@@ -92,6 +92,21 @@ class Graph:
         return np.maximum.accumulate(bounds).astype(np.int64)
 
 
+def inv_out_and_dangling(out_degree: np.ndarray, n_pad: Optional[int] = None):
+    """``(inv_out, dangling)`` float64 host arrays shared by every device
+    bundle: 1/outdeg (0 for dangling vertices) and the outdeg==0 mask.
+    With ``n_pad`` both are zero-padded — padding slots are neither sources
+    nor dangling."""
+    n = out_degree.shape[0]
+    size = n if n_pad is None else n_pad
+    out = np.zeros(size, dtype=np.float64)
+    out[:n] = out_degree
+    inv = np.where(out > 0, 1.0 / np.maximum(out, 1), 0.0)
+    dang = np.zeros(size, dtype=np.float64)
+    dang[:n] = out_degree == 0
+    return inv, dang
+
+
 @dataclasses.dataclass
 class BlockedCOO:
     """2-D edge blocking for the Pallas SpMV kernel.
@@ -119,6 +134,15 @@ class BlockedCOO:
 
 def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> BlockedCOO:
     n_blocks = -(-g.n // block)
+    if n_blocks == 0:  # empty graph: no vertices, no tiles
+        empty = np.zeros((0, tile_cap), dtype=np.int32)
+        return BlockedCOO(
+            n=g.n, block=block, n_blocks=0,
+            tiles_src_local=empty, tiles_dst_local=empty.copy(),
+            tiles_valid=np.zeros((0, tile_cap), dtype=np.float32),
+            tile_src_block=np.zeros((0,), dtype=np.int32),
+            tile_dst_block=np.zeros((0,), dtype=np.int32),
+        )
     sb = g.src // block
     db = g.dst // block
     bucket = db.astype(np.int64) * n_blocks + sb
@@ -126,7 +150,10 @@ def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> Block
     src_s, dst_s, bucket_s = g.src[order], g.dst[order], bucket[order]
 
     tiles_src, tiles_dst, tiles_val, t_sb, t_db = [], [], [], [], []
-    starts = np.flatnonzero(np.r_[True, bucket_s[1:] != bucket_s[:-1]])
+    if bucket_s.size:
+        starts = np.flatnonzero(np.r_[True, bucket_s[1:] != bucket_s[:-1]])
+    else:  # zero-edge graph: no buckets, only the coverage tiles below
+        starts = np.zeros((0,), dtype=np.int64)
     ends = np.r_[starts[1:], bucket_s.size]
     for s, e in zip(starts, ends):
         b = bucket_s[s]

@@ -1,12 +1,12 @@
-from repro.kernels.spmv.kernel import spmv_blocked
-from repro.kernels.spmv.ops import PallasGraph, pagerank_pallas, pagerank_sweep
+from repro.kernels.spmv.kernel import spmv_blocked, spmv_gs_pass
+from repro.kernels.spmv.ops import PallasGraph, pagerank_pallas
 from repro.kernels.spmv.ref import spmv_blocked_ref, spmv_ref
 
 __all__ = [
     "spmv_blocked",
+    "spmv_gs_pass",
     "PallasGraph",
     "pagerank_pallas",
-    "pagerank_sweep",
     "spmv_blocked_ref",
     "spmv_ref",
 ]

@@ -33,6 +33,22 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _tile_gather_scatter(src, dst, val, contrib):
+    """One tile's gather→mask→scatter as two one-hot MXU matmuls; both
+    schedules' kernels share this so their tile math stays identical.
+
+    src/dst: (cap,) int32 local ids; val: (cap,) f32 validity;
+    contrib: (block,) — returns the (block,) partial accumulator."""
+    block = contrib.shape[-1]
+    ids = jax.lax.broadcasted_iota(jnp.int32, (src.shape[0], block), 1)
+    onehot_src = (src[:, None] == ids).astype(jnp.float32)  # (cap, block)
+    gathered = jnp.dot(onehot_src, contrib.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)  # (cap,)
+    vals = gathered * val
+    onehot_dst = (dst[:, None] == ids).astype(jnp.float32)  # (cap, block)
+    return jnp.dot(vals, onehot_dst, preferred_element_type=jnp.float32)  # (block,)
+
+
 def _spmv_kernel(sb_ref, db_ref, contrib_ref, src_ref, dst_ref, val_ref, out_ref):
     t = pl.program_id(0)
     prev = jnp.maximum(t - 1, 0)
@@ -42,19 +58,8 @@ def _spmv_kernel(sb_ref, db_ref, contrib_ref, src_ref, dst_ref, val_ref, out_ref
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    block = out_ref.shape[-1]
-    src = src_ref[0, :]  # (cap,) int32 local src ids
-    dst = dst_ref[0, :]  # (cap,) int32 local dst ids
-    val = val_ref[0, :]  # (cap,) f32 validity
-    contrib = contrib_ref[0, :]  # (block,)
-
-    ids = jax.lax.broadcasted_iota(jnp.int32, (src.shape[0], block), 1)
-    onehot_src = (src[:, None] == ids).astype(jnp.float32)  # (cap, block)
-    gathered = jnp.dot(onehot_src, contrib.astype(jnp.float32),
-                       preferred_element_type=jnp.float32)  # (cap,)
-    vals = gathered * val
-    onehot_dst = (dst[:, None] == ids).astype(jnp.float32)  # (cap, block)
-    acc = jnp.dot(vals, onehot_dst, preferred_element_type=jnp.float32)  # (block,)
+    acc = _tile_gather_scatter(src_ref[0, :], dst_ref[0, :], val_ref[0, :],
+                               contrib_ref[0, :])
     out_ref[0, :] += acc.astype(out_ref.dtype)
 
 
@@ -92,3 +97,106 @@ def spmv_blocked(
         interpret=interpret,
     )(tile_src_block, tile_dst_block, contrib_blocks,
       tiles_src_local, tiles_dst_local, tiles_valid)
+
+
+# ---------------------------------------------------------------------------
+# No-Sync (blocked Gauss–Seidel) sweep
+# ---------------------------------------------------------------------------
+#
+# The paper's Alg-3 schedule applied to the blocked kernel: dst blocks are
+# swept **in order within one pass**, and every tile reads the *freshest*
+# contribution blocks — src blocks below the current dst block have already
+# been updated this pass, those at/above still hold the previous pass.  On
+# TPU the sequential grid makes this one deterministic member of the paper's
+# admissible asynchronous executions (Lemma 2: same fixed point), and Fig-7's
+# iteration advantage carries over because fresh reads shorten the spectral
+# tail exactly as in the pthread version.
+#
+# Implementation: the rank state lives in the *output* ref (constant index
+# map → one VMEM-resident buffer across the whole grid, written back once at
+# the end).  Step 0 copies the input ranks in; each dst-block run accumulates
+# its tiles' one-hot-matmul partial sums into a VMEM scratch, then commits
+# ``new_j = (base_eff + d·acc)·vmask_j`` into the state, so later runs gather
+# from it.  ``base_eff`` folds (1-d)/n plus the pass's dangling mass; both
+# scalars arrive via a tiny params block.  This keeps the full rank vector
+# VMEM-resident (n_blocks·block·4B), which is the right trade below ~1M
+# vertices per core; beyond that the nosync schedule shards first (see
+# core/distributed.py).
+
+
+def _spmv_gs_kernel(sb_ref, db_ref, params_ref, pr0_ref, inv_ref, vmask_ref,
+                    src_ref, dst_ref, val_ref, pr_ref, acc_ref):
+    t = pl.program_id(0)
+    num_t = pl.num_programs(0)
+    db = db_ref[t]
+    sb = sb_ref[t]
+    prev = jnp.maximum(t - 1, 0)
+    nxt = jnp.minimum(t + 1, num_t - 1)
+    is_run_start = (t == 0) | (db_ref[prev] != db)
+    is_run_end = (t == num_t - 1) | (db_ref[nxt] != db)
+
+    @pl.when(t == 0)
+    def _load_state():
+        pr_ref[...] = pr0_ref[...]
+
+    @pl.when(is_run_start)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Fresh gather: contributions come from the current state, not a snapshot.
+    contrib = (pl.load(pr_ref, (pl.ds(sb, 1), slice(None))) *
+               pl.load(inv_ref, (pl.ds(sb, 1), slice(None))))[0, :]
+    acc_ref[0, :] += _tile_gather_scatter(src_ref[0, :], dst_ref[0, :],
+                                          val_ref[0, :], contrib)
+
+    @pl.when(is_run_end)
+    def _commit_block():
+        base_eff = params_ref[0, 0]
+        d = params_ref[0, 1]
+        vm = pl.load(vmask_ref, (pl.ds(db, 1), slice(None)))[0, :]
+        new = (base_eff + d * acc_ref[0, :]) * vm
+        pl.store(pr_ref, (pl.ds(db, 1), slice(None)),
+                 new[None, :].astype(pr_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def spmv_gs_pass(
+    pr_blocks: jax.Array,  # (n_blocks, block) f32 — current ranks, padded
+    inv_out_blocks: jax.Array,  # (n_blocks, block) f32 — 1/outdeg, padded
+    vmask_blocks: jax.Array,  # (n_blocks, block) f32 — 1 for real vertices
+    params: jax.Array,  # (1, 2) f32 — [base_eff, d]
+    tiles_src_local: jax.Array,  # (T, cap) int32
+    tiles_dst_local: jax.Array,  # (T, cap) int32
+    tiles_valid: jax.Array,  # (T, cap) f32
+    tile_src_block: jax.Array,  # (T,) int32 — tiles sorted by dst_block
+    tile_dst_block: jax.Array,  # (T,) int32 — non-decreasing
+    *,
+    block: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """One full blocked Gauss–Seidel pass; returns the updated rank blocks."""
+    n_blocks = pr_blocks.shape[0]
+    T, cap = tiles_src_local.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
+            pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
+            pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, block), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _spmv_gs_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block), pr_blocks.dtype),
+        interpret=interpret,
+    )(tile_src_block, tile_dst_block, params, pr_blocks, inv_out_blocks,
+      vmask_blocks, tiles_src_local, tiles_dst_local, tiles_valid)

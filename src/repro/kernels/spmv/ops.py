@@ -1,5 +1,18 @@
-"""Jitted public wrappers around the blocked-SpMV Pallas kernel:
-a single PageRank sweep and a full while-loop solver."""
+"""Jitted public wrappers around the blocked-SpMV Pallas kernels.
+
+Two schedules share the one convergence engine (:mod:`repro.core.solver`):
+
+* ``schedule="barrier"`` — Jacobi: one :func:`spmv_blocked` sweep per
+  iteration against the previous iterate.
+* ``schedule="nosync"`` — the paper's Alg-3 schedule on the blocked kernel:
+  one :func:`spmv_gs_pass` per iteration sweeps dst blocks in order, each
+  tile gathering from the freshest rank blocks (Lemma 2: same fixed point,
+  Fig 7: no more iterations than barrier).
+
+Both support ``handle_dangling``; the dangling mass is refreshed from the
+current ranks at the top of each pass, which leaves the fixed point
+unchanged.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,9 +22,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pagerank import DEFAULT_DAMPING, PageRankResult
-from repro.graphs.csr import BlockedCOO, Graph, build_blocked_coo
-from repro.kernels.spmv.kernel import spmv_blocked
+from repro.core.solver import (
+    DEFAULT_DAMPING,
+    PageRankResult,
+    barrier_schedule,
+    register_variant,
+    solve,
+)
+from repro.graphs.csr import BlockedCOO, Graph, build_blocked_coo, inv_out_and_dangling
+from repro.kernels.spmv.kernel import spmv_blocked, spmv_gs_pass
+
+SCHEDULES = ("barrier", "nosync")
 
 
 class PallasGraph(NamedTuple):
@@ -26,14 +47,15 @@ class PallasGraph(NamedTuple):
     tile_src_block: jax.Array
     tile_dst_block: jax.Array
     inv_out_blocks: jax.Array  # (n_blocks, block)
+    dangling_blocks: jax.Array  # (n_blocks, block) — outdeg==0 mask, padded 0
 
     @classmethod
     def build(cls, g: Graph, block: int = 256, tile_cap: int = 1024) -> "PallasGraph":
         b = build_blocked_coo(g, block=block, tile_cap=tile_cap)
         n_pad = b.n_blocks * block
-        inv = np.zeros(n_pad, dtype=np.float32)
-        out = g.out_degree
-        inv[: g.n] = np.where(out > 0, 1.0 / np.maximum(out, 1), 0.0)
+        inv, dang = inv_out_and_dangling(g.out_degree, n_pad)
+        inv = inv.astype(np.float32)
+        dang = dang.astype(np.float32)
         return cls(
             n=g.n,
             block=block,
@@ -44,33 +66,58 @@ class PallasGraph(NamedTuple):
             tile_src_block=jnp.asarray(b.tile_src_block),
             tile_dst_block=jnp.asarray(b.tile_dst_block),
             inv_out_blocks=jnp.asarray(inv.reshape(b.n_blocks, block)),
+            dangling_blocks=jnp.asarray(dang.reshape(b.n_blocks, block)),
         )
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def pagerank_sweep(
-    pr_blocks: jax.Array,  # (n_blocks, block)
-    pg: PallasGraph,
-    d: float = DEFAULT_DAMPING,
-    *,
-    block: int,
-    n: int | None = None,
-    interpret: bool = False,
-) -> jax.Array:
-    """One Jacobi sweep: pr' = (1-d)/n + d · A^T (pr/outdeg), blocked layout."""
-    n = n if n is not None else pg.n
-    contrib = pr_blocks * pg.inv_out_blocks
-    acc = spmv_blocked(
-        contrib,
-        pg.tiles_src_local,
-        pg.tiles_dst_local,
-        pg.tiles_valid,
-        pg.tile_src_block,
-        pg.tile_dst_block,
-        block=block,
-        interpret=interpret,
-    )
-    return (1.0 - d) / n + d * acc
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "block", "n_blocks", "max_iter", "schedule",
+                     "handle_dangling", "interpret"),
+)
+def _pallas_impl(
+    tiles_src_local, tiles_dst_local, tiles_valid, tile_src_block,
+    tile_dst_block, inv_out_blocks, dangling_blocks,
+    *, n, block, n_blocks, d, threshold, max_iter, schedule, handle_dangling,
+    interpret,
+):
+    n_pad = n_blocks * block
+    base = (1.0 - d) / n
+    # padding vertices have no in-edges: keep their rank at 0 via a mask
+    vmask = (jnp.arange(n_pad) < n).astype(jnp.float32).reshape(n_blocks, block)
+
+    def dangling_mass(pr):
+        if not handle_dangling:
+            return jnp.asarray(0.0, jnp.float32)
+        return jnp.sum(pr * dangling_blocks) / n
+
+    if schedule == "barrier":
+
+        def sweep(pr):
+            contrib = pr * inv_out_blocks
+            acc = spmv_blocked(
+                contrib, tiles_src_local, tiles_dst_local, tiles_valid,
+                tile_src_block, tile_dst_block, block=block, interpret=interpret,
+            )
+            return (base + d * acc + d * dangling_mass(pr)) * vmask
+
+    else:  # nosync: one blocked Gauss–Seidel pass per engine iteration
+
+        def sweep(pr):
+            params = jnp.stack(
+                [jnp.asarray(base + d * dangling_mass(pr), jnp.float32),
+                 jnp.asarray(d, jnp.float32)]
+            ).reshape(1, 2)
+            return spmv_gs_pass(
+                pr, inv_out_blocks, vmask, params,
+                tiles_src_local, tiles_dst_local, tiles_valid,
+                tile_src_block, tile_dst_block, block=block, interpret=interpret,
+            )
+
+    step = barrier_schedule(sweep)
+    pr0 = jnp.full((n_blocks, block), 1.0 / n, jnp.float32) * vmask
+    r = solve(step, pr0, threshold=threshold, max_iter=max_iter)
+    return PageRankResult(r.pr.reshape(-1)[:n], r.iterations, r.err)
 
 
 def pagerank_pallas(
@@ -79,25 +126,51 @@ def pagerank_pallas(
     threshold: float = 1e-8,
     max_iter: int = 10_000,
     interpret: bool = False,
+    schedule: str = "barrier",
+    handle_dangling: bool = False,
 ) -> PageRankResult:
-    """Full Pallas-kernel PageRank (barrier/Jacobi schedule)."""
-    n, block = pg.n, pg.block
-    n_pad = pg.n_blocks * block
-    # padding vertices have no in-edges: keep their rank at 0 via a mask
-    vmask = (jnp.arange(n_pad) < n).astype(jnp.float32).reshape(pg.n_blocks, block)
-
-    def body(state):
-        pr, it, _ = state
-        new = pagerank_sweep(pr, pg, d, block=block, n=n, interpret=interpret) * vmask
-        err = jnp.max(jnp.abs(new - pr))
-        return new, it + 1, err
-
-    def cond(state):
-        _, it, err = state
-        return (err > threshold) & (it < max_iter)
-
-    pr0 = jnp.full((pg.n_blocks, block), 1.0 / n, jnp.float32) * vmask
-    pr, it, err = jax.lax.while_loop(
-        cond, body, (pr0, jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, jnp.float32))
+    """Full Pallas-kernel PageRank on the chosen schedule."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}, got {schedule!r}")
+    if pg.n == 0:
+        return PageRankResult(jnp.zeros((0,), jnp.float32),
+                              jnp.asarray(0, jnp.int32),
+                              jnp.asarray(0.0, jnp.float32))
+    return _pallas_impl(
+        pg.tiles_src_local, pg.tiles_dst_local, pg.tiles_valid,
+        pg.tile_src_block, pg.tile_dst_block, pg.inv_out_blocks,
+        pg.dangling_blocks,
+        n=pg.n, block=pg.block, n_blocks=pg.n_blocks,
+        d=d, threshold=threshold, max_iter=max_iter, schedule=schedule,
+        handle_dangling=handle_dangling, interpret=interpret,
     )
-    return PageRankResult(pr.reshape(-1)[:n], it, err)
+
+
+# ---------------------------------------------------------------------------
+# Registry entries
+# ---------------------------------------------------------------------------
+
+
+def _build(g, block: int = 256, tile_cap: int = 1024, **_):
+    return PallasGraph.build(g, block=block, tile_cap=tile_cap)
+
+
+def _run(schedule):
+    def run(b, *, d=DEFAULT_DAMPING, threshold=1e-8, max_iter=10_000,
+            handle_dangling=False, interpret=False, **_):
+        return pagerank_pallas(
+            b, d=d, threshold=threshold, max_iter=max_iter, interpret=interpret,
+            schedule=schedule, handle_dangling=handle_dangling,
+        )
+
+    return run
+
+
+register_variant(
+    "pallas", build=_build, run=_run("barrier"),
+    description="blocked MXU SpMV kernel, Jacobi (barrier) schedule",
+)
+register_variant(
+    "pallas_nosync", build=_build, run=_run("nosync"),
+    description="blocked MXU SpMV kernel, Alg-3 fresh-read (Gauss–Seidel) schedule",
+)

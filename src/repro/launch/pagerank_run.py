@@ -1,7 +1,11 @@
-"""PageRank driver: run any paper variant on any Table-1 dataset surrogate.
+"""PageRank driver: run any registered variant on any Table-1 dataset surrogate.
 
     PYTHONPATH=src python -m repro.launch.pagerank_run --dataset webStanford \
         --variant nosync --threads 56 [--scale-down 256] [--ckpt /tmp/pr]
+
+Variants come from the registry (``repro.core.solver``); ``--list`` prints
+them with descriptions.  The Pallas variants run the kernel in interpret mode
+off-TPU automatically.
 """
 from __future__ import annotations
 
@@ -10,56 +14,48 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    DeviceGraph, EdgeCentricGraph, IdenticalNodePlan, PartitionedGraph,
-    SolverCheckpoint, l1_norm, pagerank_barrier, pagerank_barrier_edge,
-    pagerank_barrier_opt, pagerank_identical, pagerank_nosync, pagerank_numpy,
-)
-from repro.graphs import DATASETS, make_dataset, rmat_graph
-from repro.kernels.spmv import PallasGraph, pagerank_pallas
-
-VARIANTS = ("barrier", "barrier_edge", "barrier_opt", "barrier_identical",
-            "nosync", "nosync_opt", "pallas", "sequential")
+from repro.core import SolverCheckpoint, l1_norm, pagerank_numpy
+from repro.core.solver import get_variant, list_variants, solve_variant
+from repro.graphs import DATASETS, make_dataset
+from repro.utils.jaxcompat import on_tpu
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", choices=tuple(DATASETS), default="webStanford")
     ap.add_argument("--scale-down", type=float, default=256.0)
-    ap.add_argument("--variant", choices=VARIANTS, default="nosync")
+    ap.add_argument("--variant", choices=list_variants(), default="nosync")
     ap.add_argument("--threads", type=int, default=56)
     ap.add_argument("--threshold", type=float, default=1e-8)
+    ap.add_argument("--block", type=int, default=256, help="pallas dst/src block size")
+    ap.add_argument("--tile-cap", type=int, default=1024, help="pallas edges per tile")
+    ap.add_argument("--handle-dangling", action="store_true",
+                    help="redistribute dangling mass uniformly (all variants)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--list", action="store_true", help="list variants and exit")
     args = ap.parse_args(argv)
+
+    if args.list:
+        for name in list_variants():
+            print(f"{name:20s} {get_variant(name).description}")
+        return 0
 
     g = make_dataset(args.dataset, scale_down=args.scale_down)
     print(f"{args.dataset}: n={g.n} m={g.m} (scale_down={args.scale_down:g})")
-    ref, it_seq = pagerank_numpy(g, threshold=1e-12)
+    ref, it_seq = pagerank_numpy(g, threshold=1e-12,
+                                 handle_dangling=args.handle_dangling)
 
     t0 = time.time()
-    if args.variant == "sequential":
-        pr, iters = pagerank_numpy(g, threshold=args.threshold)
-        err = 0.0
-    elif args.variant == "barrier":
-        r = pagerank_barrier(DeviceGraph.from_graph(g), threshold=args.threshold)
-        pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)
-    elif args.variant == "barrier_edge":
-        r = pagerank_barrier_edge(EdgeCentricGraph.from_graph(g), threshold=args.threshold)
-        pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)
-    elif args.variant == "barrier_opt":
-        r = pagerank_barrier_opt(DeviceGraph.from_graph(g), threshold=args.threshold)
-        pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)
-    elif args.variant == "barrier_identical":
-        r = pagerank_identical(IdenticalNodePlan.from_graph(g), threshold=args.threshold)
-        pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)
-    elif args.variant == "pallas":
-        r = pagerank_pallas(PallasGraph.build(g), threshold=args.threshold, interpret=True)
-        pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)
-    else:
-        pg = PartitionedGraph.from_graph(g, p=args.threads)
-        r = pagerank_nosync(pg, threshold=args.threshold,
-                            perforate=args.variant.endswith("opt"))
-        pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)
+    r = solve_variant(
+        args.variant, g,
+        threshold=args.threshold,
+        handle_dangling=args.handle_dangling,
+        threads=args.threads,
+        block=args.block,
+        tile_cap=args.tile_cap,
+        interpret=not on_tpu(),
+    )
+    pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)
     wall = time.time() - t0
 
     print(f"variant={args.variant}: iterations={iters} err={err:.2e} wall={wall:.2f}s")

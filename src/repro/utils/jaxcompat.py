@@ -1,0 +1,63 @@
+"""Version-portable wrappers over jax APIs that moved between 0.4.x and 0.6+.
+
+The repo targets current jax, but the verification container pins jax 0.4.37,
+where ``AxisType`` does not exist, ``jax.make_mesh`` has no ``axis_types``
+kwarg, and ``AbstractMesh`` takes a tuple of (name, size) pairs.  Everything
+mesh-shaped goes through these two helpers so call sites stay clean.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import AbstractMesh, Mesh
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+
+    _HAS_AXIS_TYPE = True
+except ImportError:
+    AxisType = None
+    _HAS_AXIS_TYPE = False
+
+try:  # jax >= 0.6: top-level export, `check_vma` kwarg
+    from jax import shard_map as _shard_map_impl
+
+    _SHARD_MAP_CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x: experimental module, `check_rep` kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    _SHARD_MAP_CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """``jax.shard_map`` across export locations and check-kwarg renames;
+    call sites use the modern ``check_vma`` spelling."""
+    if "check_vma" in kwargs:
+        kwargs[_SHARD_MAP_CHECK_KW] = kwargs.pop("check_vma")
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def on_tpu() -> bool:
+    """True when the default jax backend is a real TPU (Pallas can compile);
+    False → callers should run kernels in interpret mode."""
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def abstract_mesh(shape: Sequence[int], axes: Sequence[str]) -> AbstractMesh:
+    """Device-less mesh for spec/lowering tests, across AbstractMesh signatures."""
+    if _HAS_AXIS_TYPE:
+        return AbstractMesh(tuple(shape), tuple(axes),
+                            axis_types=(AxisType.Auto,) * len(axes))
+    return AbstractMesh(tuple(zip(tuple(axes), tuple(shape))))

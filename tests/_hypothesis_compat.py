@@ -1,0 +1,175 @@
+"""Minimal drop-in replacement for the subset of ``hypothesis`` the suite uses.
+
+The container this repo is verified in does not ship ``hypothesis`` and cannot
+install it, so the property tests fall back to this shim (via try/except in
+each test module).  Instead of adaptive random search + shrinking, ``@given``
+runs the test body over a small **deterministic seed sweep**: example ``i``
+draws every strategy from ``np.random.default_rng(_SEED_BASE + i)``.  That
+keeps the property tests meaningful (each run exercises several random
+instances, identically on every machine) while staying dependency-free.
+
+Supported surface — exactly what ``tests/`` imports:
+
+* ``given(*strategies)``
+* ``strategies.integers / tuples / lists / sampled_from / composite / just``
+* ``settings(max_examples=N)`` as a decorator, plus the
+  ``register_profile``/``load_profile`` classmethods used by ``conftest.py``
+* ``HealthCheck.too_slow`` / ``HealthCheck.data_too_large``
+
+``max_examples`` is capped at ``_MAX_EXAMPLES_CAP`` — the shim is a seed
+sweep, not a search, so large example counts only cost time.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+_SEED_BASE = 7_919
+_DEFAULT_EXAMPLES = 5
+_MAX_EXAMPLES_CAP = 8
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class SearchStrategy:
+    """A strategy is just a deterministic sampler: rng -> value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng=None):
+        if rng is None:
+            rng = np.random.default_rng(_SEED_BASE)
+        return self._sample(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred, _max_tries: int = 64):
+        def sample(rng):
+            for _ in range(_max_tries):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter_too_much: predicate rejected every draw")
+
+        return SearchStrategy(sample)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (imported ``as st``)."""
+
+    SearchStrategy = SearchStrategy
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> SearchStrategy:
+        return SearchStrategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def just(value) -> SearchStrategy:
+        return SearchStrategy(lambda rng: value)
+
+    @staticmethod
+    def sampled_from(seq) -> SearchStrategy:
+        seq = list(seq)
+        return SearchStrategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    @staticmethod
+    def tuples(*ss: SearchStrategy) -> SearchStrategy:
+        return SearchStrategy(lambda rng: tuple(s._sample(rng) for s in ss))
+
+    @staticmethod
+    def lists(s: SearchStrategy, min_size: int = 0, max_size: int = 16) -> SearchStrategy:
+        def sample(rng):
+            k = int(rng.integers(min_size, max_size + 1))
+            return [s._sample(rng) for _ in range(k)]
+
+        return SearchStrategy(sample)
+
+    @staticmethod
+    def composite(fn):
+        """``@st.composite`` — ``fn(draw, *args)`` becomes a strategy factory."""
+
+        @functools.wraps(fn)
+        def factory(*args, **kwargs):
+            def sample(rng):
+                return fn(lambda s: s._sample(rng), *args, **kwargs)
+
+            return SearchStrategy(sample)
+
+        return factory
+
+
+st = strategies
+
+
+class settings:
+    """Decorator + profile registry, mirroring ``hypothesis.settings``."""
+
+    _profiles: dict[str, dict] = {}
+    _active: dict = {}
+
+    def __init__(self, max_examples: int | None = None, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._compat_max_examples = min(self.max_examples, _MAX_EXAMPLES_CAP)
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs) -> None:
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._active = cls._profiles.get(name, {})
+
+
+def _active_default_examples() -> int:
+    n = settings._active.get("max_examples", _DEFAULT_EXAMPLES)
+    return min(int(n), _MAX_EXAMPLES_CAP)
+
+
+def given(*strategies_pos: SearchStrategy, **strategies_kw: SearchStrategy):
+    """Run the test over a deterministic seed sweep of the given strategies."""
+
+    def decorate(test):
+        @functools.wraps(test)
+        def wrapper():
+            n = getattr(wrapper, "_compat_max_examples", None)
+            if n is None:
+                n = getattr(test, "_compat_max_examples", _active_default_examples())
+            for i in range(n):
+                rng = np.random.default_rng(_SEED_BASE + i)
+                args = [s._sample(rng) for s in strategies_pos]
+                kwargs = {k: s._sample(rng) for k, s in strategies_kw.items()}
+                try:
+                    test(*args, **kwargs)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"falsifying example (shim seed {_SEED_BASE + i}, "
+                        f"example {i + 1}/{n}): args={args!r} kwargs={kwargs!r}"
+                    ) from e
+
+        # Hide the original signature so pytest does not try to inject the
+        # drawn parameters as fixtures.
+        wrapper.__signature__ = inspect.Signature([])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate

@@ -1,6 +1,18 @@
+import sys
+
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
+
+try:  # real hypothesis when available; deterministic shim otherwise
+    from hypothesis import HealthCheck, settings
+except ImportError:
+    import _hypothesis_compat
+
+    # conftest loads before any test module, so registering the shim here
+    # lets plain `from hypothesis import given` work everywhere — a new test
+    # module cannot re-kill collection by forgetting the fallback import.
+    sys.modules["hypothesis"] = _hypothesis_compat
+    from _hypothesis_compat import HealthCheck, settings
 
 settings.register_profile(
     "ci", deadline=None, max_examples=25,

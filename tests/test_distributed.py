@@ -23,15 +23,15 @@ from repro.graphs import rmat_graph
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_param_specs_divide_on_production_mesh(arch):
-    from jax.sharding import AbstractMesh, AxisType
     from repro.launch.specs import abstract_train_state
     from repro.sharding.rules import param_specs
+    from repro.utils.jaxcompat import abstract_mesh
 
-    mesh = AbstractMesh((16, 16), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     cfg = get_config(arch)
     state = abstract_train_state(cfg)
     specs = param_specs(state.params, mesh)
-    flat_p = jax.tree.leaves_with_path(state.params)
+    flat_p = jax.tree_util.tree_leaves_with_path(state.params)
     flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
     assert len(flat_p) == len(flat_s)
     for (path, leaf), spec in zip(flat_p, flat_s):
@@ -46,11 +46,11 @@ def test_param_specs_divide_on_production_mesh(arch):
 def test_moe_expert_sharding_fallback():
     """mixtral has 8 experts on a 16-way model axis → expert dim must NOT be
     sharded; the FFN dim is sharded instead."""
-    from jax.sharding import AbstractMesh, AxisType
     from repro.launch.specs import abstract_params
     from repro.sharding.rules import param_specs
+    from repro.utils.jaxcompat import abstract_mesh
 
-    mesh = AbstractMesh((16, 16), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     cfg = get_config("mixtral-8x22b")
     specs = param_specs(abstract_params(cfg), mesh)
     wi_spec = specs["layers"]["mlp"]["wi"]
@@ -78,7 +78,8 @@ _DIST_SCRIPT = textwrap.dedent(
     g = rmat_graph(9, avg_degree=6, seed=1)
     ref, _ = pagerank_numpy(g, threshold=1e-12)
     pg = PartitionedGraph.from_graph(g, p=8)
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.utils.jaxcompat import make_mesh
+    mesh = make_mesh((8,), ("data",))
     out = {}
     rb = distributed_pagerank(pg, mesh, mode="barrier", threshold=1e-7)
     out["barrier"] = {"rounds": int(rb.iterations), "l1": l1_norm(rb.pr, ref)}

@@ -2,7 +2,11 @@
 iteration-count claims (Fig 7), perforation accuracy trade (Fig 5/6)."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, strategies as st
 
 from repro.core import (
     DeviceGraph,

@@ -1,0 +1,171 @@
+"""Convergence-engine + registry tests: every registered variant shares the
+sequential oracle's fixed point (Lemma 2) on three dataset surrogates —
+including dangling redistribution — the Pallas No-Sync schedule needs no more
+iterations than barrier (Fig 7), thread-level termination is safe, and the
+blocked-COO builder survives empty/zero-edge graphs."""
+import numpy as np
+import pytest
+
+from repro.core import PartitionedGraph, l1_norm, pagerank_nosync, pagerank_numpy
+from repro.core.solver import get_variant, list_variants, solve_variant
+from repro.graphs import build_blocked_coo, rmat_graph
+from repro.graphs.csr import Graph
+from repro.kernels.spmv import PallasGraph, pagerank_pallas
+
+THRESH = 1e-8
+# keep the interpreted Pallas kernels fast: small blocks, small tiles
+OPTS = dict(threads=4, block=64, tile_cap=128, interpret=True)
+
+
+def lattice_graph(w: int = 12, h: int = 12) -> Graph:
+    """2-D grid, bidirectional right/down edges — road-network surrogate."""
+    edges = []
+    for y in range(h):
+        for x in range(w):
+            u = y * w + x
+            if x + 1 < w:
+                edges += [(u, u + 1), (u + 1, u)]
+            if y + 1 < h:
+                edges += [(u, u + w), (u + w, u)]
+    src, dst = zip(*edges)
+    return Graph.from_edges(w * h, np.asarray(src), np.asarray(dst))
+
+
+def dangling_heavy_graph(n: int = 96, seed: int = 0) -> Graph:
+    """Half the vertices are pure sinks (outdeg 0) — crawl-frontier surrogate."""
+    rng = np.random.default_rng(seed)
+    hubs = n // 2
+    src = rng.integers(0, hubs, size=4 * n)
+    dst = rng.integers(0, n, size=4 * n)
+    g = Graph.from_edges(n, src, dst)
+    assert (g.out_degree == 0).sum() >= n // 2 - 1  # the surrogate is honest
+    return g
+
+
+SURROGATES = {
+    "rmat": lambda: rmat_graph(8, avg_degree=5, seed=3),
+    "lattice": lambda: lattice_graph(),
+    "dangling_heavy": lambda: dangling_heavy_graph(),
+}
+
+
+def test_registry_contains_all_paper_variants():
+    names = set(list_variants())
+    assert names >= {
+        "sequential", "barrier", "barrier_edge", "barrier_opt",
+        "barrier_identical", "nosync", "nosync_opt", "pallas", "pallas_nosync",
+    }
+    for n in names:
+        assert get_variant(n).description
+
+
+def test_unknown_variant_raises():
+    with pytest.raises(KeyError, match="unknown PageRank variant"):
+        get_variant("nosync_quantum")
+
+
+def test_unknown_option_raises_not_silently_dropped():
+    g = rmat_graph(6, avg_degree=4, seed=0)
+    # typo'd option must not be swallowed (caller would believe it applied)
+    with pytest.raises(TypeError, match="handle_dangeling"):
+        solve_variant("barrier", g, handle_dangeling=True)
+    # perforation is a separate registry entry, not an option
+    with pytest.raises(TypeError, match="perforate"):
+        solve_variant("nosync", g, perforate=True)
+    # declared per-variant options go through
+    r = solve_variant("nosync", g, threshold=THRESH, threads=4, thread_level=False)
+    ref, _ = pagerank_numpy(g, threshold=1e-12)
+    assert l1_norm(r.pr, ref) < 1e-5
+
+
+@pytest.mark.parametrize("gname", sorted(SURROGATES))
+@pytest.mark.parametrize("vname", sorted(set(list_variants()) - {"sequential"}))
+def test_registry_round_trip_matches_oracle(gname, vname):
+    """Acceptance: every registered variant converges to the pagerank_numpy
+    fixed point within 1e-5 L1 on all three surrogates."""
+    g = SURROGATES[gname]()
+    ref, _ = pagerank_numpy(g, threshold=1e-12)
+    r = solve_variant(vname, g, threshold=THRESH, **OPTS)
+    # perforated variants trade a bounded L1 for early freezing (Fig 5/6)
+    tol = 1e-3 if vname.endswith("_opt") else 1e-5
+    assert l1_norm(r.pr, ref) < tol, f"{vname} on {gname}"
+    assert int(r.iterations) >= 1
+
+
+@pytest.mark.parametrize("gname", sorted(SURROGATES))
+@pytest.mark.parametrize(
+    "vname", ["barrier", "barrier_edge", "barrier_identical", "nosync",
+              "pallas", "pallas_nosync"],
+)
+def test_registry_round_trip_with_dangling(gname, vname):
+    """Same fixed point with dangling-mass redistribution — the satellite
+    that used to silently drop handle_dangling on most variants."""
+    g = SURROGATES[gname]()
+    ref, _ = pagerank_numpy(g, threshold=1e-12, handle_dangling=True)
+    r = solve_variant(vname, g, threshold=THRESH, handle_dangling=True, **OPTS)
+    assert l1_norm(r.pr, ref) < 1e-5, f"{vname} on {gname}"
+    # redistributed mass keeps the ranks a (near-)distribution
+    assert 0.9 < float(np.asarray(r.pr, np.float64).sum()) < 1.0 + 1e-4
+
+
+def test_pallas_nosync_iterations_not_worse_fig7():
+    """Paper Fig 7: the fresh-read schedule must not take more iterations
+    than the barrier schedule on the same kernel."""
+    g = rmat_graph(9, avg_degree=6, seed=1)
+    pgk = PallasGraph.build(g, block=128, tile_cap=256)
+    rb = pagerank_pallas(pgk, threshold=1e-7, interpret=True)
+    rn = pagerank_pallas(pgk, threshold=1e-7, interpret=True, schedule="nosync")
+    ref, _ = pagerank_numpy(g, threshold=1e-12)
+    assert l1_norm(rn.pr, ref) < 1e-3
+    assert int(rn.iterations) <= int(rb.iterations)
+
+
+def test_pallas_rejects_unknown_schedule():
+    g = rmat_graph(6, avg_degree=4, seed=0)
+    pgk = PallasGraph.build(g, block=64, tile_cap=128)
+    with pytest.raises(ValueError, match="schedule"):
+        pagerank_pallas(pgk, schedule="warp")
+
+
+def test_nosync_thread_level_termination_safe():
+    """Thread-level convergence (Alg 3 l.17-19) is observed-error semantics:
+    it may shed tail sweeps but must not change the fixed point."""
+    g = rmat_graph(8, avg_degree=5, seed=11)
+    ref, _ = pagerank_numpy(g, threshold=1e-12)
+    pg = PartitionedGraph.from_graph(g, p=6)
+    r_on = pagerank_nosync(pg, threshold=1e-9, thread_level=True)
+    r_off = pagerank_nosync(pg, threshold=1e-9, thread_level=False)
+    assert l1_norm(r_on.pr, ref) < 1e-5
+    assert l1_norm(r_off.pr, ref) < 1e-5
+    assert int(r_on.iterations) == int(r_off.iterations)
+
+
+# ---------------------------------------------------------------------------
+# blocked-COO edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_build_blocked_coo_empty_graph():
+    g = Graph.from_edges(0, np.zeros(0, np.int32), np.zeros(0, np.int32))
+    b = build_blocked_coo(g, block=64, tile_cap=128)
+    assert b.n_blocks == 0 and b.num_tiles == 0
+    assert b.tiles_src_local.shape == (0, 128)
+    r = pagerank_pallas(PallasGraph.build(g, block=64, tile_cap=128))
+    assert r.pr.shape == (0,) and int(r.iterations) == 0
+
+
+def test_build_blocked_coo_zero_edges():
+    n = 40
+    g = Graph.from_edges(n, np.zeros(0, np.int32), np.zeros(0, np.int32))
+    b = build_blocked_coo(g, block=16, tile_cap=32)
+    # every dst block still gets a (padding) tile so output runs initialize
+    assert b.n_blocks == 3 and b.num_tiles == 3
+    assert float(b.tiles_valid.sum()) == 0.0
+    ref, _ = pagerank_numpy(g, threshold=1e-12, handle_dangling=True)
+    for schedule in ("barrier", "nosync"):
+        r = pagerank_pallas(
+            PallasGraph.build(g, block=16, tile_cap=32),
+            threshold=THRESH, interpret=True, schedule=schedule,
+            handle_dangling=True,
+        )
+        assert l1_norm(r.pr, ref) < 1e-6

@@ -51,12 +51,11 @@ def test_pagerank_full_pipeline(tmp_path):
 def test_build_cell_in_process_small_mesh():
     """The dry-run builders produce lower()-able cells on whatever devices
     exist (1 here) — the 512-device path is exercised by launch/dryrun.py."""
-    from jax.sharding import AxisType
-
     from repro.configs import ShapeSpec
     from repro.launch.specs import build_cell
+    from repro.utils.jaxcompat import make_mesh
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_config("qwen2-vl-2b").reduced()
     for kind in ("train", "prefill", "decode"):
         shape = ShapeSpec(kind, 64, 4, kind)
