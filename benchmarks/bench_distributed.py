@@ -1,9 +1,12 @@
-"""Stale-sync (No-Sync on TPU) vs barrier: collective traffic & rounds.
+"""Stale-sync (No-Sync on TPU) vs barrier vs top-k exchange: traffic & rounds.
 
-Runs in a subprocess with 8 host devices; measures real rounds-to-converge
-and real wall time of the shard_map solvers, and derives the collective-
-bytes-per-solve reduction (the pod-scale win of the paper's idea: exchange
-frequency ÷ local_sweeps at equal fixed point).
+Runs in a subprocess with 8 host devices; drives the *registry* entries
+(``distributed_barrier`` / ``distributed_stale`` / ``distributed_topk``) via
+``solve_variant`` — the same path the launcher and round-trip tests use — and
+measures real rounds-to-converge, real wall time, and the derived
+collective-bytes-per-solve reduction (the pod-scale win of the paper's idea:
+exchange frequency ÷ local_sweeps at equal fixed point, and top-k delta
+publishing beyond it).
 """
 from __future__ import annotations
 
@@ -21,23 +24,40 @@ _SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax
     from repro.graphs import make_dataset
-    from repro.core import PartitionedGraph, distributed_pagerank, pagerank_numpy, l1_norm
+    from repro.core import pagerank_numpy, l1_norm
+    from repro.core.solver import build_variant, get_variant
 
     g = make_dataset("webStanford", scale_down=64)
     ref, _ = pagerank_numpy(g, threshold=1e-12)
-    pg = PartitionedGraph.from_graph(g, p=8)
-    from repro.utils.jaxcompat import make_mesh
-    mesh = make_mesh((8,), ("data",))
     out = {"n": g.n, "m": g.m}
-    for mode, k in (("barrier", 1), ("stale", 2), ("stale", 4), ("stale", 8)):
+    p = 8
+    vp = -(-g.n // p)
+    n_pad = vp * p
+    runs = [
+        ("barrier_k1", "distributed_barrier", dict(local_sweeps=1)),
+        ("stale_k2", "distributed_stale", dict(local_sweeps=2)),
+        ("stale_k4", "distributed_stale", dict(local_sweeps=4)),
+        ("stale_k8", "distributed_stale", dict(local_sweeps=8)),
+        ("topk_f8", "distributed_topk", dict(local_sweeps=2, send_fraction=0.125)),
+    ]
+    # one shared bundle (all three variants have layout="distributed"); the
+    # timed region is the solve only, not the host-side partitioning/mesh build
+    _, bundle = build_variant("distributed_barrier", g, threads=p)
+    for key, variant, opts in runs:
+        v = get_variant(variant)
         t0 = time.perf_counter()
-        r = distributed_pagerank(pg, mesh, mode=mode, local_sweeps=k, threshold=1e-7)
+        r = v.run(bundle, threshold=1e-7, **opts)
         rounds = int(r.iterations)
         wall = time.perf_counter() - t0
-        # each round all-gathers the rank vector: bytes = rounds * n_pad * 4
-        coll = rounds * pg.n_pad * 4
-        out[f"{mode}_k{k}"] = {"rounds": rounds, "wall_s": wall,
-                               "coll_bytes": coll, "l1": l1_norm(r.pr, ref)}
+        if variant == "distributed_topk":
+            # each round publishes k index+value pairs per shard (8B each)
+            k = max(1, int(vp * opts["send_fraction"]))
+            coll = rounds * p * k * 8
+        else:
+            # each round all-gathers the rank vector: bytes = rounds * n_pad * 4
+            coll = rounds * n_pad * 4
+        out[key] = {"rounds": rounds, "wall_s": wall,
+                    "coll_bytes": coll, "l1": l1_norm(r.pr, ref)}
     print(json.dumps(out))
     """
 )
@@ -52,7 +72,7 @@ def main() -> list[str]:
     out = json.loads(res.stdout.strip().splitlines()[-1])
     rows = []
     base = out["barrier_k1"]
-    for key in ("barrier_k1", "stale_k2", "stale_k4", "stale_k8"):
+    for key in ("barrier_k1", "stale_k2", "stale_k4", "stale_k8", "topk_f8"):
         d = out[key]
         rows.append(csv_row(
             f"dist/{key}", d["wall_s"] * 1e6,

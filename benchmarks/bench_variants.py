@@ -1,17 +1,33 @@
 """Fig 1/2 — speedup per parallel variant on standard + synthetic datasets.
 
-Variants are enumerated from the registry (``repro.core.solver``), so a newly
-registered variant shows up in this table for free.  Two measurements per
-(dataset × variant):
+Variants are enumerated from the registry (``repro.core.solver``) and driven
+purely by registry **metadata**, so a newly registered variant shows up in
+this table for free — correctly:
+
+  * ``Variant.layout`` keys bundle sharing (one build per layout per dataset;
+    the pallas tile bucketing and DeviceGraph conversion are the expensive
+    host-side steps);
+  * ``Variant.backend`` flags interpret-mode Pallas runs (``interpreted=1``)
+    and skips the host oracle;
+  * ``Variant.schedule`` picks the simulator discipline.
+
+Two measurements per (dataset × variant):
 
   * real single-device wall time of the jitted solver (CPU; absolute);
   * simulated 56-worker makespan under the event-driven cost model
-    (repro.core.runtime) with lognormal per-sweep jitter — this is what
+    (repro.core.runtime) with lognormal per-sweep jitter scaled by the actual
+    per-partition edge loads of the equal-vertex allocation — this is what
     reproduces the paper's *relative* claims (no-sync > barrier) on a box
     with one core. Speedup = simulated sequential time / simulated variant
     makespan.
+
+``--json PATH`` additionally writes the records as JSON (the ``check.sh``
+perf-trajectory artifact ``BENCH_variants.json``).
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 
@@ -24,41 +40,48 @@ from repro.utils.jaxcompat import on_tpu
 
 THRESH = 1e-8
 P = 56  # the paper's thread count
+# fixed exchange staleness for the distributed nosync variants, passed
+# explicitly so the cost model knows sweeps-per-round (= this) exactly
+LOCAL_SWEEPS = 2
 
-# off-TPU the Pallas kernels run interpreted — measure them, but flag it
-PALLAS_VARIANTS = ("pallas", "pallas_nosync")
 INTERPRET = not on_tpu()
 
 
-def variant_rows(name: str) -> list[str]:
-    g = make_dataset(name, scale_down=SCALE_DOWN)
+def bench_records(name: str, scale_down: float = SCALE_DOWN) -> list[dict]:
+    g = make_dataset(name, scale_down=scale_down)
     ref, it_seq = pagerank_numpy(g, threshold=1e-12)
     pg = PartitionedGraph.from_graph(g, p=P)
-    rows = []
+    # actual per-partition edge loads of the equal-vertex allocation drive
+    # the cost model (the skew edge-balanced boundaries would remove)
+    rel_costs = np.asarray(pg.emask, dtype=np.float64).sum(axis=1)
+    records = []
 
-    # variants sharing a bundle layout share one build (pallas tile bucketing
-    # and DeviceGraph conversion are the expensive host-side steps)
-    bundle_kind = {"barrier": "device", "barrier_opt": "device",
-                   "nosync": "pg", "nosync_opt": "pg",
-                   "pallas": "pallas", "pallas_nosync": "pallas"}
-    bundles = {"pg": pg}  # the simulator's PartitionedGraph doubles as the nosync bundle
+    # one build per bundle layout (registry metadata), shared across variants
+    bundles = {"partitioned": pg}  # the simulator's pg doubles as the nosync bundle
 
     sim_seq = None
     for vname in list_variants():
-        if vname == "sequential":
-            continue
         v = get_variant(vname)
-        kind = bundle_kind.get(vname, vname)
+        if v.backend == "numpy":
+            continue  # the oracle is the reference, not a competitor
+        kind = v.layout or vname
         if kind not in bundles:
             bundles[kind] = v.build(g, threads=P)
         bundle = bundles[kind]
-        fn = lambda: v.run(bundle, threshold=THRESH, interpret=INTERPRET)
+        fn = lambda: v.run(bundle, threshold=THRESH, interpret=INTERPRET,
+                           local_sweeps=LOCAL_SWEEPS)
         r = fn()
         wall = time_call(fn)
         iters = int(r.iterations)
-        # simulated 56-worker makespan with jitter
-        discipline = "nosync" if "nosync" in vname else "barrier"
-        sim = simulate_jittered(pg, discipline, iterations=iters, seed=1)
+        # simulated 56-worker makespan with jitter, discipline from metadata.
+        # Distributed nosync variants report exchange ROUNDS with
+        # LOCAL_SWEEPS sweeps each — the cost model counts sweeps, so scale.
+        discipline = v.schedule if v.schedule in ("barrier", "nosync") else "barrier"
+        sweeps = iters * (LOCAL_SWEEPS
+                          if v.backend == "shard_map" and v.schedule == "nosync"
+                          else 1)
+        sim = simulate_jittered(pg, discipline, iterations=sweeps, seed=1,
+                                rel_costs=rel_costs)
         if sim_seq is None:
             # "barrier" sorts first, so its iteration count is already in hand
             it_b = iters if vname == "barrier" else int(
@@ -66,21 +89,50 @@ def variant_rows(name: str) -> list[str]:
                     get_variant("barrier").build(g), threshold=THRESH
                 ).iterations
             )
-            sim_seq = simulate_jittered(pg, "sequential", iterations=it_b, seed=1)
-        speedup = sim_seq / sim
-        derived = f"iters={iters};sim_speedup_vs_seq={speedup:.1f};l1={l1_norm(r.pr, ref):.2e}"
-        if vname in PALLAS_VARIANTS and INTERPRET:
-            derived += ";interpreted=1"
-        rows.append(csv_row(f"fig1_2/{name}/{vname}", wall * 1e6, derived))
-    return rows
+            sim_seq = simulate_jittered(pg, "sequential", iterations=it_b,
+                                        seed=1, rel_costs=rel_costs)
+        records.append({
+            "dataset": name,
+            "variant": vname,
+            "wall_us": wall * 1e6,
+            "iters": iters,
+            "sim_speedup_vs_seq": sim_seq / sim,
+            "l1_vs_oracle": l1_norm(r.pr, ref),
+            "interpreted": bool(v.backend == "pallas" and INTERPRET),
+        })
+    return records
 
 
-def main() -> list[str]:
+def _rows(records: list[dict]) -> list[str]:
     rows = []
-    for ds in BENCH_DATASETS:
-        rows += variant_rows(ds)
+    for rec in records:
+        derived = (f"iters={rec['iters']};"
+                   f"sim_speedup_vs_seq={rec['sim_speedup_vs_seq']:.1f};"
+                   f"l1={rec['l1_vs_oracle']:.2e}")
+        if rec["interpreted"]:
+            derived += ";interpreted=1"
+        rows.append(csv_row(f"fig1_2/{rec['dataset']}/{rec['variant']}",
+                            rec["wall_us"], derived))
     return rows
+
+
+def main(datasets=None, scale_down: float = SCALE_DOWN,
+         json_path: str | None = None) -> list[str]:
+    records = []
+    for ds in (datasets or BENCH_DATASETS):
+        records += bench_records(ds, scale_down=scale_down)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(records, f, indent=1)
+    return _rows(records)
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default=None,
+                    help="comma-separated subset (default: all bench datasets)")
+    ap.add_argument("--scale-down", type=float, default=SCALE_DOWN)
+    ap.add_argument("--json", default=None, help="also write records as JSON")
+    args = ap.parse_args()
+    ds = args.datasets.split(",") if args.datasets else None
+    print("\n".join(main(ds, scale_down=args.scale_down, json_path=args.json)))

@@ -9,7 +9,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q "$@"
 
+echo "== smoke: registry imports (--list) =="
+python -m repro.launch.pagerank_run --list
+
 echo "== smoke: pallas_nosync launcher =="
 python -m repro.launch.pagerank_run --variant pallas_nosync --scale-down 2048
+
+echo "== perf trajectory: BENCH_variants.json (quick, 1 dataset) =="
+python -m benchmarks.bench_variants --datasets webStanford --scale-down 2048 \
+    --json BENCH_variants.json
+echo "wrote BENCH_variants.json"
 
 echo "check.sh: all green"

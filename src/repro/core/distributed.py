@@ -17,9 +17,23 @@ TPU adaptation of the paper's coordination schemes (DESIGN.md §2):
 * shard-level convergence — the TPU version of the paper's *thread-level*
   convergence: a shard whose residual is below threshold skips its sweep
   compute (masked) but keeps serving its frozen ranks to others.
+
+All modes support ``handle_dangling``: the dangling-mass term is snapshotted
+once per round from the freshly exchanged rank vector (the same
+iteration-start semantics as ``_nosync_impl``'s prologue — Lemma 2: the fixed
+point is stationary, so a bounded-staleness dangling snapshot leaves it
+unchanged) and folded into every sweep's base term.
+
+The solvers are also **registry entries** (``distributed_barrier``,
+``distributed_stale``, ``distributed_topk``): ``build`` makes a
+:class:`DistributedBundle` (PartitionedGraph + 1-D mesh over however many
+devices exist, capped by ``threads``), so the launcher, benchmarks, and the
+Lemma-2 round-trip tests cover the pod-scale modes exactly like the
+single-device variants.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -29,11 +43,15 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.pagerank import DEFAULT_DAMPING, PageRankResult, PartitionedGraph
-from repro.utils.jaxcompat import shard_map
+from repro.core.solver import register_variant
+from repro.utils.jaxcompat import make_mesh, shard_map
 
 
 def _sweep(pr_full, local, srcs, dsts, emask, inv_out, base, d, vp, offset):
-    """One Gauss–Seidel sweep of the local partition against pr_full."""
+    """One Gauss–Seidel sweep of the local partition against pr_full.
+
+    ``base`` is the per-vertex additive term — (1-d)/n plus, when dangling
+    mass is handled, this round's redistributed d·(dangling mass)/n."""
     pr_full = jax.lax.dynamic_update_slice_in_dim(pr_full, local, offset, 0)
     contrib = (pr_full * inv_out)[srcs] * emask
     acc = jax.ops.segment_sum(contrib, dsts, num_segments=vp, indices_are_sorted=True)
@@ -52,6 +70,7 @@ def distributed_pagerank(
     threshold: float = 1e-8,
     max_rounds: int = 10_000,
     shard_level_convergence: bool = False,
+    handle_dangling: bool = False,
 ) -> PageRankResult:
     """Run PageRank on ``mesh`` with partitions sharded along ``axis``.
 
@@ -70,7 +89,7 @@ def distributed_pagerank(
     base = jnp.asarray((1.0 - d) / n, dtype)
     thr = jnp.asarray(threshold, dtype)
 
-    def solver(src_pad, dst_local, emask, inv_out):
+    def solver(src_pad, dst_local, emask, inv_out, dangling):
         # shapes inside shard_map: src_pad (1, cap), inv_out (n_pad,) replicated
         srcs, dsts, msk = src_pad[0], dst_local[0], emask[0]
         idx = jax.lax.axis_index(axis)
@@ -81,6 +100,10 @@ def distributed_pagerank(
             local, err_local, _, rounds = state
             # exchange: gather the full rank vector (the barrier / halo snapshot)
             pr_full = jax.lax.all_gather(local, axis, tiled=True)
+            # dangling-mass snapshot at round start (iteration-start semantics,
+            # one O(n) reduction per exchange; padding slots have dangling=0)
+            base_eff = base + (d * jnp.sum(pr_full * dangling) / n
+                               if handle_dangling else 0.0)
 
             def do_sweeps(local):
                 # Convergence metric = FIRST sweep's residual (fresh-halo
@@ -89,7 +112,7 @@ def distributed_pagerank(
                 # convergence and would exit prematurely.
                 def one(i, carry):
                     local, err = carry
-                    new, err_s = _sweep(pr_full, local, srcs, dsts, msk, inv_out, base, d, vp, offset)
+                    new, err_s = _sweep(pr_full, local, srcs, dsts, msk, inv_out, base_eff, d, vp, offset)
                     err = jnp.where(i == 0, err_s, err)
                     return new, err
 
@@ -119,14 +142,15 @@ def distributed_pagerank(
     mapped = shard_map(
         solver,
         mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P(axis, None), P()),
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(), P()),
         out_specs=(P(axis), P(axis), P(axis)),
         check_vma=False,
     )
 
     # Note: stale-mode GS sweeps inside one round reuse the *same* snapshot
     # for remote ranks; pr_full is refreshed with fresh local ranks each sweep.
-    pr, errs, rounds = jax.jit(mapped)(pg.src_pad, pg.dst_local, pg.emask, pg.inv_out)
+    pr, errs, rounds = jax.jit(mapped)(pg.src_pad, pg.dst_local, pg.emask,
+                                       pg.inv_out, pg.dangling)
     return PageRankResult(pr[:n], rounds[0], jnp.max(errs))
 
 
@@ -139,6 +163,7 @@ def distributed_pagerank_topk(
     d: float = DEFAULT_DAMPING,
     threshold: float = 1e-8,
     max_rounds: int = 10_000,
+    handle_dangling: bool = False,
 ) -> PageRankResult:
     """**Communication perforation** (beyond-paper, §Perf hillclimb #3).
 
@@ -163,7 +188,7 @@ def distributed_pagerank_topk(
     base = jnp.asarray((1.0 - d) / n, dtype)
     thr = jnp.asarray(threshold, dtype)
 
-    def solver(src_pad, dst_local, emask, inv_out):
+    def solver(src_pad, dst_local, emask, inv_out, dangling):
         srcs, dsts, msk = src_pad[0], dst_local[0], emask[0]
         idx_range = jax.lax.axis_index(axis)
         offset = idx_range * vp
@@ -182,10 +207,19 @@ def distributed_pagerank_topk(
             g_val = jax.lax.all_gather(top_val, axis)  # (p,k)
             snap = snap.at[g_idx.reshape(-1)].set(g_val.reshape(-1))
 
+            # dangling-mass snapshot from the freshest local view (snapshot
+            # with own fresh ranks folded in) — bounded staleness, fixed
+            # point unchanged (Lemma 2)
+            if handle_dangling:
+                pr_eff = jax.lax.dynamic_update_slice_in_dim(snap, local, offset, 0)
+                base_eff = base + d * jnp.sum(pr_eff * dangling) / n
+            else:
+                base_eff = base
+
             # 2. local Gauss–Seidel sweeps against the snapshot
             def one(i, carry):
                 loc, err = carry
-                new, err_s = _sweep(snap, loc, srcs, dsts, msk, inv_out, base, d, vp, offset)
+                new, err_s = _sweep(snap, loc, srcs, dsts, msk, inv_out, base_eff, d, vp, offset)
                 err = jnp.where(i == 0, err_s, err)
                 return new, err
 
@@ -207,9 +241,87 @@ def distributed_pagerank_topk(
     mapped = shard_map(
         solver,
         mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P(axis, None), P()),
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(), P()),
         out_specs=(P(axis), P(axis), P(axis)),
         check_vma=False,
     )
-    pr, errs, rounds = jax.jit(mapped)(pg.src_pad, pg.dst_local, pg.emask, pg.inv_out)
+    pr, errs, rounds = jax.jit(mapped)(pg.src_pad, pg.dst_local, pg.emask,
+                                       pg.inv_out, pg.dangling)
     return PageRankResult(pr[:n], rounds[0], jnp.max(errs))
+
+
+# ---------------------------------------------------------------------------
+# Registry entries — DistributedBundle build + the three pod-scale modes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DistributedBundle:
+    """Device bundle of the distributed variants: the partitioned graph plus
+    the 1-D mesh its partitions are sharded over."""
+
+    pg: PartitionedGraph
+    mesh: Mesh
+    axis: str = "data"
+
+    @property
+    def p(self) -> int:
+        return self.pg.p
+
+
+def solver_mesh(p: Optional[int] = None, axis: str = "data") -> Mesh:
+    """1-D mesh for the distributed solvers: ``min(p, devices)`` shards (all
+    devices when ``p`` is None).  The partition count must equal the mesh
+    axis size, so the build fn derives ``p`` from this mesh — asking for 56
+    partitions on a single-host run degrades gracefully instead of raising."""
+    n_dev = jax.device_count()
+    p = n_dev if p is None else max(1, min(int(p), n_dev))
+    return make_mesh((p,), (axis,))
+
+
+def _dist_build(g, threads: int = 8, **_) -> DistributedBundle:
+    mesh = solver_mesh(threads)
+    axis = "data"
+    return DistributedBundle(
+        pg=PartitionedGraph.from_graph(g, p=mesh.shape[axis]), mesh=mesh,
+        axis=axis,
+    )
+
+
+def _dist_run(mode: str):
+    def run(b: DistributedBundle, *, d=DEFAULT_DAMPING, threshold=1e-8,
+            max_iter=10_000, handle_dangling=False, local_sweeps=4, **_):
+        return distributed_pagerank(
+            b.pg, b.mesh, axis=b.axis, mode=mode, local_sweeps=local_sweeps,
+            d=d, threshold=threshold, max_rounds=max_iter,
+            handle_dangling=handle_dangling,
+        )
+
+    return run
+
+
+def _dist_topk_run(b: DistributedBundle, *, d=DEFAULT_DAMPING, threshold=1e-8,
+                   max_iter=10_000, handle_dangling=False, local_sweeps=2,
+                   send_fraction=0.125, **_):
+    return distributed_pagerank_topk(
+        b.pg, b.mesh, axis=b.axis, send_fraction=send_fraction,
+        local_sweeps=local_sweeps, d=d, threshold=threshold,
+        max_rounds=max_iter, handle_dangling=handle_dangling,
+    )
+
+
+register_variant(
+    "distributed_barrier", build=_dist_build, run=_dist_run("barrier"),
+    description="shard_map Jacobi: one all-gather exchange per sweep (Alg 1 at pod scale)",
+    layout="distributed", backend="shard_map", schedule="barrier",
+)
+register_variant(
+    "distributed_stale", build=_dist_build, run=_dist_run("stale"),
+    description="shard_map No-Sync: local_sweeps GS sweeps per exchange (bounded staleness)",
+    layout="distributed", backend="shard_map", schedule="nosync",
+)
+register_variant(
+    "distributed_topk", build=_dist_build, run=_dist_topk_run,
+    description="communication perforation: top-k delta exchange + error-feedback ledger",
+    layout="distributed", backend="shard_map", schedule="nosync",
+)

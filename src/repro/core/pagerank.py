@@ -23,8 +23,13 @@ Variant map (paper §4 → registry name → composition):
                           independent).  ``thread_level`` termination per
                           Alg 3 l.17-19 is the schedule's observed-error skip.
 * ``nosync_opt``        — Alg 3 + Alg 5 perforation transform.
-* ``pallas``/``pallas_nosync`` — the blocked Pallas SpMV sweep on either
-                          schedule; registered from ``repro.kernels.spmv.ops``.
+* ``pallas``/``pallas_nosync``/``pallas_nosync_opt`` — the blocked Pallas
+                          SpMV sweep on either schedule (plus the perforated
+                          fresh-read form); registered from
+                          ``repro.kernels.spmv.ops``.
+* ``distributed_barrier``/``distributed_stale``/``distributed_topk`` — the
+                          shard_map pod-scale modes; registered from
+                          ``repro.core.distributed``.
 
 Every variant accepts ``handle_dangling`` and, when set, converges to the
 same dangling-redistributed fixed point as :func:`pagerank_numpy` (the
@@ -469,30 +474,35 @@ def _sequential_run(g, **kw):
 register_variant(
     "sequential", build=lambda g, **_: g, run=_sequential_run,
     description="numpy float64 Jacobi oracle (paper baseline)",
+    layout="host", backend="numpy", schedule="sequential",
 )
 register_variant(
     "barrier",
     build=lambda g, **_: DeviceGraph.from_graph(g),
     run=lambda b, **kw: pagerank_barrier(b, **_run_kw(kw)),
     description="Alg 1: Jacobi power iteration (vertex-centric)",
+    layout="device", backend="jax", schedule="barrier",
 )
 register_variant(
     "barrier_edge",
     build=lambda g, **_: EdgeCentricGraph.from_graph(g),
     run=lambda b, **kw: pagerank_barrier_edge(b, **_run_kw(kw)),
     description="Alg 2: 3-phase edge-centric scatter/gather",
+    layout="edge", backend="jax", schedule="barrier",
 )
 register_variant(
     "barrier_opt",
     build=lambda g, **_: DeviceGraph.from_graph(g),
     run=lambda b, **kw: pagerank_barrier_opt(b, **_run_kw(kw)),
     description="Alg 1 + Alg 5 loop perforation",
+    layout="device", backend="jax", schedule="barrier",
 )
 register_variant(
     "barrier_identical",
     build=lambda g, **_: IdenticalNodePlan.from_graph(g),
     run=lambda b, **kw: pagerank_identical(b, **_run_kw(kw)),
     description="STIC-D identical-node sharing on the barrier schedule",
+    layout="identical", backend="jax", schedule="barrier",
 )
 register_variant(
     "nosync",
@@ -501,6 +511,7 @@ register_variant(
         b, thread_level=thread_level, **_run_kw(kw)),
     description="Alg 3: barrier-free fresh-read partition sweeps",
     options=("thread_level",),
+    layout="partitioned", backend="jax", schedule="nosync",
 )
 register_variant(
     "nosync_opt",
@@ -509,4 +520,5 @@ register_variant(
         b, perforate=True, thread_level=thread_level, **_run_kw(kw)),
     description="Alg 3 + Alg 5 loop perforation",
     options=("thread_level",),
+    layout="partitioned", backend="jax", schedule="nosync",
 )

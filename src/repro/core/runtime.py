@@ -170,15 +170,35 @@ def simulate(
     return SimResult(pr[: pg.n], max_iter, float(clocks.max()), work)
 
 
+def partition_sweep_costs(g, p: int, edge_balanced: bool = False) -> np.ndarray:
+    """Relative per-partition sweep costs (= in-edges owned, the work a
+    vertex-centric sweep actually does) under the static allocation's
+    boundaries — ``Graph.partition_ranges(p, edge_balanced)``.
+
+    The paper's equal-vertex splits (``edge_balanced=False``) skew badly on
+    power-law graphs (a hub-heavy partition owns most edges); the
+    edge-balanced boundaries equalize these costs — feed either to
+    :func:`simulate_jittered` ``rel_costs`` to see the makespan difference.
+    """
+    bounds = g.partition_ranges(p, edge_balanced=edge_balanced)
+    return np.diff(np.asarray(g.in_ptr)[bounds]).astype(np.float64)
+
+
 def simulate_jittered(
     pg: PartitionedGraph,
     discipline: str,
     iterations: int,
     seed: int = 0,
     sigma: float = 0.3,
+    rel_costs: Optional[np.ndarray] = None,
 ) -> float:
     """Makespan (seconds) of ``iterations`` rounds under lognormal per-sweep
     jitter — the cost model behind the Fig 1–4 speedup reproduction.
+
+    ``rel_costs`` (p,) are deterministic per-partition sweep costs (e.g. from
+    :func:`partition_sweep_costs`), normalized here to mean 1 so makespans
+    stay comparable across allocations; omitted = uniform (the idealized
+    edge-balanced assumption the docstring used to hard-code).
 
     * sequential — one worker sweeps all p partitions every iteration.
     * barrier    — round time = max over workers (the barrier waits).
@@ -190,6 +210,11 @@ def simulate_jittered(
     rng = np.random.default_rng(seed)
     p = pg.p
     costs = rng.lognormal(mean=0.0, sigma=sigma, size=(iterations, p))
+    if rel_costs is not None:
+        rel = np.asarray(rel_costs, dtype=np.float64)
+        if rel.shape != (p,):
+            raise ValueError(f"rel_costs shape {rel.shape} != ({p},)")
+        costs = costs * (rel * p / max(float(rel.sum()), 1e-300))[None, :]
     if discipline == "sequential":
         return float(costs.sum())
     if discipline == "barrier":

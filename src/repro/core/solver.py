@@ -85,14 +85,23 @@ def _apply_transforms(transforms: Sequence[Transform], old, new, frozen):
 # ---------------------------------------------------------------------------
 
 
-def barrier_schedule(sweep: Callable[[jax.Array], jax.Array],
-                     transforms: Sequence[Transform] = ()) -> Callable:
+def barrier_schedule(sweep: Callable[..., jax.Array],
+                     transforms: Sequence[Transform] = (),
+                     *, pass_frozen: bool = False) -> Callable:
     """Jacobi: ``sweep(pr)`` proposes a full replacement computed from the
     previous iterate; the data dependence of the while-loop body *is* the
-    barrier (paper Alg 1).  One schedule unit."""
+    barrier (paper Alg 1).  One schedule unit.
+
+    ``pass_frozen`` calls ``sweep(pr, frozen)`` instead, for sweeps that can
+    exploit the perforation freeze mask *inside* the sweep (e.g. the blocked
+    Pallas Gauss–Seidel pass, whose in-pass fresh reads must see frozen
+    vertices at their frozen values).  The freeze *decision* still lives in
+    the engine's :func:`perforation` transform — the sweep only respects the
+    mask, it never updates it.  Requires ``track_frozen=True`` in
+    :func:`solve` (otherwise ``frozen`` is a zero-size stub)."""
 
     def step(state: EngineState) -> EngineState:
-        new = sweep(state.pr)
+        new = sweep(state.pr, state.frozen) if pass_frozen else sweep(state.pr)
         new, frozen = _apply_transforms(transforms, state.pr, new, state.frozen)
         err = jnp.max(jnp.abs(new - state.pr))
         return EngineState(new, frozen, jnp.full_like(state.perr, err), state.it + 1)
@@ -210,6 +219,22 @@ class Variant:
     d=..., threshold=..., max_iter=..., handle_dangling=..., **opts)`` solves
     and returns a :class:`PageRankResult`.  ``options`` names extra keyword
     options this variant honours beyond the transport set.
+
+    The three metadata fields drive the generic drivers, so a new variant
+    shows up in the launcher/benchmarks correctly without touching them:
+
+    * ``layout``  — bundle-layout key: variants with the same ``layout``
+      produce identical bundles from identical build opts, so benchmarks
+      build once per layout and share it (``"device"``, ``"edge"``,
+      ``"identical"``, ``"partitioned"``, ``"blocked"``, ``"distributed"``,
+      ``"host"``; empty = private layout, never shared).
+    * ``backend`` — what executes the sweeps: ``"numpy"`` (host oracle),
+      ``"jax"`` (jitted single-device), ``"pallas"`` (Pallas kernels — run
+      interpreted off-TPU, and benchmarks flag that), ``"shard_map"``
+      (device-mesh collectives).
+    * ``schedule`` — coordination discipline for the runtime cost model:
+      ``"barrier"``, ``"nosync"`` (fresh/stale reads, no global barrier), or
+      ``"sequential"``.
     """
 
     name: str
@@ -217,26 +242,42 @@ class Variant:
     run: Callable[..., PageRankResult]
     description: str = ""
     options: tuple[str, ...] = ()
+    layout: str = ""
+    backend: str = "jax"
+    schedule: str = "barrier"
 
 
 _REGISTRY: dict[str, Variant] = {}
 
 # Options the launcher/benchmarks pass uniformly; variants that don't need
-# one ignore it (e.g. --threads with a barrier variant), mirroring the CLI.
-_TRANSPORT_OPTS = frozenset({"threads", "block", "tile_cap", "interpret"})
+# one ignore it (e.g. --threads with a barrier variant, --local-sweeps with
+# any single-device variant), mirroring the CLI.  ``local_sweeps`` and
+# ``send_fraction`` are the mesh-transport knobs of the distributed variants
+# (exchange staleness and top-k collective perforation); the coordination
+# ``mode`` is baked into the registry name (``distributed_barrier`` vs
+# ``distributed_stale``) so it is never a silently-ignored option.
+_TRANSPORT_OPTS = frozenset(
+    {"threads", "block", "tile_cap", "interpret", "local_sweeps",
+     "send_fraction"}
+)
 
 
 def register_variant(name: str, build: Callable, run: Callable,
                      description: str = "",
-                     options: tuple[str, ...] = ()) -> Variant:
+                     options: tuple[str, ...] = (),
+                     layout: str = "",
+                     backend: str = "jax",
+                     schedule: str = "barrier") -> Variant:
     v = Variant(name=name, build=build, run=run, description=description,
-                options=options)
+                options=options, layout=layout, backend=backend,
+                schedule=schedule)
     _REGISTRY[name] = v
     return v
 
 
 def _ensure_registered() -> None:
     # Variants self-register at import; pull in every module that defines one.
+    import repro.core.distributed  # noqa: F401
     import repro.core.pagerank  # noqa: F401
     import repro.kernels.spmv.ops  # noqa: F401
 
@@ -256,18 +297,12 @@ def get_variant(name: str) -> Variant:
         ) from None
 
 
-def solve_variant(
-    name: str,
-    g,
-    *,
-    d: float = DEFAULT_DAMPING,
-    threshold: float = 1e-8,
-    max_iter: int = 10_000,
-    handle_dangling: bool = False,
-    **opts,
-) -> PageRankResult:
-    """Build the bundle for ``name`` and solve — the one-call entry point used
-    by the launcher, benchmarks, and the registry round-trip tests.
+def build_variant(name: str, g, **opts) -> tuple[Variant, Any]:
+    """Validate ``opts`` and build ``name``'s device bundle from host graph
+    ``g``; returns ``(variant, bundle)``.  Callers that need the bundle (the
+    launcher records its actual partition count in checkpoints) use this and
+    then ``variant.run(bundle, ...)``; everyone else uses
+    :func:`solve_variant`.
 
     Unknown options raise instead of being silently dropped — a typo'd or
     unsupported option (e.g. ``perforate`` on ``nosync``: use ``nosync_opt``)
@@ -279,6 +314,30 @@ def solve_variant(
             f"variant {name!r} does not accept option(s) {sorted(unknown)}; "
             f"accepted: {sorted(_TRANSPORT_OPTS | set(v.options))}"
         )
-    bundle = v.build(g, **opts)
+    return v, v.build(g, **opts)
+
+
+def bundle_partitions(bundle) -> int:
+    """Partition count actually baked into a built bundle — ``p`` for the
+    partitioned/distributed layouts, 1 for unpartitioned ones.  Checkpoints
+    must record *this*, not the requested ``--threads`` (an unpartitioned
+    solve resharded on load as if it had 56 partitions pads the rank vector
+    to a layout that was never used)."""
+    return int(getattr(bundle, "p", 1))
+
+
+def solve_variant(
+    name: str,
+    g,
+    *,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 10_000,
+    handle_dangling: bool = False,
+    **opts,
+) -> PageRankResult:
+    """Build the bundle for ``name`` and solve — the one-call entry point used
+    by the launcher, benchmarks, and the registry round-trip tests."""
+    v, bundle = build_variant(name, g, **opts)
     return v.run(bundle, d=d, threshold=threshold, max_iter=max_iter,
                  handle_dangling=handle_dangling, **opts)

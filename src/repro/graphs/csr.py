@@ -83,9 +83,15 @@ class Graph:
 
     def partition_ranges(self, p: int, edge_balanced: bool = True) -> np.ndarray:
         """(p+1,) vertex boundaries. Paper uses static equal-vertex partitions;
-        we default to edge-balanced boundaries (fixes their load-skew issue)."""
+        we default to edge-balanced boundaries (fixes their load-skew issue).
+
+        ``edge_balanced=False`` reproduces the ``ceil(n/p)`` splits
+        :meth:`PartitionedGraph.from_graph` actually allocates (trailing
+        partitions may be empty), so per-partition costs derived from these
+        boundaries describe the runtime layout exactly."""
         if not edge_balanced:
-            return np.linspace(0, self.n, p + 1).round().astype(np.int64)
+            vp = -(-self.n // p) if self.n else 0
+            return np.minimum(np.arange(p + 1, dtype=np.int64) * vp, self.n)
         targets = np.linspace(0, self.m, p + 1)
         bounds = np.searchsorted(self.in_ptr, targets, side="left")
         bounds[0], bounds[-1] = 0, self.n

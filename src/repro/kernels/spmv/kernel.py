@@ -125,7 +125,7 @@ def spmv_blocked(
 
 
 def _spmv_gs_kernel(sb_ref, db_ref, params_ref, pr0_ref, inv_ref, vmask_ref,
-                    src_ref, dst_ref, val_ref, pr_ref, acc_ref):
+                    frozen_ref, src_ref, dst_ref, val_ref, pr_ref, acc_ref):
     t = pl.program_id(0)
     num_t = pl.num_programs(0)
     db = db_ref[t]
@@ -154,7 +154,14 @@ def _spmv_gs_kernel(sb_ref, db_ref, params_ref, pr0_ref, inv_ref, vmask_ref,
         base_eff = params_ref[0, 0]
         d = params_ref[0, 1]
         vm = pl.load(vmask_ref, (pl.ds(db, 1), slice(None)))[0, :]
+        # perforation (Alg 5): frozen vertices keep their current rank, so
+        # in-pass fresh reads by later dst blocks observe the frozen value.
+        # The freeze mask is decided OUTSIDE the kernel (the engine's
+        # perforation transform); here it is only respected.
+        fz = pl.load(frozen_ref, (pl.ds(db, 1), slice(None)))[0, :]
+        old = pl.load(pr_ref, (pl.ds(db, 1), slice(None)))[0, :]
         new = (base_eff + d * acc_ref[0, :]) * vm
+        new = fz * old + (1.0 - fz) * new
         pl.store(pr_ref, (pl.ds(db, 1), slice(None)),
                  new[None, :].astype(pr_ref.dtype))
 
@@ -164,6 +171,7 @@ def spmv_gs_pass(
     pr_blocks: jax.Array,  # (n_blocks, block) f32 — current ranks, padded
     inv_out_blocks: jax.Array,  # (n_blocks, block) f32 — 1/outdeg, padded
     vmask_blocks: jax.Array,  # (n_blocks, block) f32 — 1 for real vertices
+    frozen_blocks: jax.Array,  # (n_blocks, block) f32 — 1 for perforation-frozen
     params: jax.Array,  # (1, 2) f32 — [base_eff, d]
     tiles_src_local: jax.Array,  # (T, cap) int32
     tiles_dst_local: jax.Array,  # (T, cap) int32
@@ -174,7 +182,13 @@ def spmv_gs_pass(
     block: int,
     interpret: bool = False,
 ) -> jax.Array:
-    """One full blocked Gauss–Seidel pass; returns the updated rank blocks."""
+    """One full blocked Gauss–Seidel pass; returns the updated rank blocks.
+
+    ``frozen_blocks`` is the VMEM-resident Alg-5 freeze mask: a frozen
+    vertex's rank is held at its current value when its dst block commits
+    (pass all-zeros for the unperforated schedule — the mask costs one
+    VMEM-resident ``(n_blocks, block)`` operand, same footprint as
+    ``vmask_blocks``)."""
     n_blocks = pr_blocks.shape[0]
     T, cap = tiles_src_local.shape
 
@@ -183,6 +197,7 @@ def spmv_gs_pass(
         grid=(T,),
         in_specs=[
             pl.BlockSpec((1, 2), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
             pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
             pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
             pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
@@ -199,4 +214,5 @@ def spmv_gs_pass(
         out_shape=jax.ShapeDtypeStruct((n_blocks, block), pr_blocks.dtype),
         interpret=interpret,
     )(tile_src_block, tile_dst_block, params, pr_blocks, inv_out_blocks,
-      vmask_blocks, tiles_src_local, tiles_dst_local, tiles_valid)
+      vmask_blocks, frozen_blocks, tiles_src_local, tiles_dst_local,
+      tiles_valid)

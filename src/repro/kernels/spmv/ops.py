@@ -12,6 +12,11 @@ Two schedules share the one convergence engine (:mod:`repro.core.solver`):
 Both support ``handle_dangling``; the dangling mass is refreshed from the
 current ranks at the top of each pass, which leaves the fixed point
 unchanged.
+
+``pallas_nosync_opt`` adds Alg-5 loop perforation to the nosync schedule:
+the engine's ``perforation`` transform owns the freeze mask, and the kernel
+receives it as an extra VMEM operand so in-pass fresh reads see frozen
+vertices at their frozen values.
 """
 from __future__ import annotations
 
@@ -26,6 +31,7 @@ from repro.core.solver import (
     DEFAULT_DAMPING,
     PageRankResult,
     barrier_schedule,
+    perforation,
     register_variant,
     solve,
 )
@@ -73,13 +79,13 @@ class PallasGraph(NamedTuple):
 @functools.partial(
     jax.jit,
     static_argnames=("n", "block", "n_blocks", "max_iter", "schedule",
-                     "handle_dangling", "interpret"),
+                     "handle_dangling", "interpret", "perforate"),
 )
 def _pallas_impl(
     tiles_src_local, tiles_dst_local, tiles_valid, tile_src_block,
     tile_dst_block, inv_out_blocks, dangling_blocks,
     *, n, block, n_blocks, d, threshold, max_iter, schedule, handle_dangling,
-    interpret,
+    interpret, perforate,
 ):
     n_pad = n_blocks * block
     base = (1.0 - d) / n
@@ -103,20 +109,29 @@ def _pallas_impl(
 
     else:  # nosync: one blocked Gauss–Seidel pass per engine iteration
 
-        def sweep(pr):
+        def sweep(pr, frozen=None):
             params = jnp.stack(
                 [jnp.asarray(base + d * dangling_mass(pr), jnp.float32),
                  jnp.asarray(d, jnp.float32)]
             ).reshape(1, 2)
+            # freeze mask as an extra VMEM operand: frozen vertices hold
+            # their rank through the pass, so in-pass fresh reads stay
+            # consistent with the engine transform's post-pass revert
+            frz = (jnp.zeros_like(vmask) if frozen is None
+                   else frozen.astype(jnp.float32))
             return spmv_gs_pass(
-                pr, inv_out_blocks, vmask, params,
+                pr, inv_out_blocks, vmask, frz, params,
                 tiles_src_local, tiles_dst_local, tiles_valid,
                 tile_src_block, tile_dst_block, block=block, interpret=interpret,
             )
 
-    step = barrier_schedule(sweep)
+    # Perforation is the ENGINE's transform (Alg 5), not a kernel fork: the
+    # kernel only respects the mask the transform maintains.
+    transforms = (perforation(threshold),) if perforate else ()
+    step = barrier_schedule(sweep, transforms, pass_frozen=perforate)
     pr0 = jnp.full((n_blocks, block), 1.0 / n, jnp.float32) * vmask
-    r = solve(step, pr0, threshold=threshold, max_iter=max_iter)
+    r = solve(step, pr0, threshold=threshold, max_iter=max_iter,
+              track_frozen=perforate)
     return PageRankResult(r.pr.reshape(-1)[:n], r.iterations, r.err)
 
 
@@ -128,10 +143,14 @@ def pagerank_pallas(
     interpret: bool = False,
     schedule: str = "barrier",
     handle_dangling: bool = False,
+    perforate: bool = False,
 ) -> PageRankResult:
     """Full Pallas-kernel PageRank on the chosen schedule."""
     if schedule not in SCHEDULES:
         raise ValueError(f"schedule must be one of {SCHEDULES}, got {schedule!r}")
+    if perforate and schedule != "nosync":
+        raise ValueError("perforate requires the nosync schedule "
+                         "(the freeze mask is a spmv_gs_pass operand)")
     if pg.n == 0:
         return PageRankResult(jnp.zeros((0,), jnp.float32),
                               jnp.asarray(0, jnp.int32),
@@ -143,6 +162,7 @@ def pagerank_pallas(
         n=pg.n, block=pg.block, n_blocks=pg.n_blocks,
         d=d, threshold=threshold, max_iter=max_iter, schedule=schedule,
         handle_dangling=handle_dangling, interpret=interpret,
+        perforate=perforate,
     )
 
 
@@ -155,12 +175,13 @@ def _build(g, block: int = 256, tile_cap: int = 1024, **_):
     return PallasGraph.build(g, block=block, tile_cap=tile_cap)
 
 
-def _run(schedule):
+def _run(schedule, perforate=False):
     def run(b, *, d=DEFAULT_DAMPING, threshold=1e-8, max_iter=10_000,
             handle_dangling=False, interpret=False, **_):
         return pagerank_pallas(
             b, d=d, threshold=threshold, max_iter=max_iter, interpret=interpret,
             schedule=schedule, handle_dangling=handle_dangling,
+            perforate=perforate,
         )
 
     return run
@@ -169,8 +190,15 @@ def _run(schedule):
 register_variant(
     "pallas", build=_build, run=_run("barrier"),
     description="blocked MXU SpMV kernel, Jacobi (barrier) schedule",
+    layout="blocked", backend="pallas", schedule="barrier",
 )
 register_variant(
     "pallas_nosync", build=_build, run=_run("nosync"),
     description="blocked MXU SpMV kernel, Alg-3 fresh-read (Gauss–Seidel) schedule",
+    layout="blocked", backend="pallas", schedule="nosync",
+)
+register_variant(
+    "pallas_nosync_opt", build=_build, run=_run("nosync", perforate=True),
+    description="blocked MXU SpMV kernel, Alg-3 fresh-read schedule + Alg-5 perforation",
+    layout="blocked", backend="pallas", schedule="nosync",
 )

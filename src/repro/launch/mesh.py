@@ -22,3 +22,14 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_host_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
     """Small mesh over however many (host) devices exist — tests/benchmarks."""
     return make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_solver_mesh(p: int | None = None, axis: str = "data") -> Mesh:
+    """1-D mesh for the distributed PageRank solvers (graph partitions
+    sharded along ``axis``): ``min(p, devices)`` shards, all devices when
+    ``p`` is None.  Same mesh the registry's ``distributed_*`` build fn uses,
+    exposed here for callers driving :func:`repro.core.distributed_pagerank`
+    directly at pod scale."""
+    from repro.core.distributed import solver_mesh
+
+    return solver_mesh(p, axis=axis)

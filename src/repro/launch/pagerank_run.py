@@ -15,7 +15,9 @@ import time
 import numpy as np
 
 from repro.core import SolverCheckpoint, l1_norm, pagerank_numpy
-from repro.core.solver import get_variant, list_variants, solve_variant
+from repro.core.solver import (
+    build_variant, bundle_partitions, get_variant, list_variants,
+)
 from repro.graphs import DATASETS, make_dataset
 from repro.utils.jaxcompat import on_tpu
 
@@ -29,6 +31,10 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=1e-8)
     ap.add_argument("--block", type=int, default=256, help="pallas dst/src block size")
     ap.add_argument("--tile-cap", type=int, default=1024, help="pallas edges per tile")
+    ap.add_argument("--local-sweeps", type=int, default=4,
+                    help="distributed: GS sweeps per exchange (staleness bound)")
+    ap.add_argument("--send-fraction", type=float, default=0.125,
+                    help="distributed_topk: fraction of deltas published per round")
     ap.add_argument("--handle-dangling", action="store_true",
                     help="redistribute dangling mass uniformly (all variants)")
     ap.add_argument("--ckpt", default=None)
@@ -37,7 +43,8 @@ def main(argv=None) -> int:
 
     if args.list:
         for name in list_variants():
-            print(f"{name:20s} {get_variant(name).description}")
+            v = get_variant(name)
+            print(f"{name:20s} [{v.backend}/{v.schedule}] {v.description}")
         return 0
 
     g = make_dataset(args.dataset, scale_down=args.scale_down)
@@ -45,16 +52,18 @@ def main(argv=None) -> int:
     ref, it_seq = pagerank_numpy(g, threshold=1e-12,
                                  handle_dangling=args.handle_dangling)
 
-    t0 = time.time()
-    r = solve_variant(
-        args.variant, g,
-        threshold=args.threshold,
-        handle_dangling=args.handle_dangling,
+    opts = dict(
         threads=args.threads,
         block=args.block,
         tile_cap=args.tile_cap,
+        local_sweeps=args.local_sweeps,
+        send_fraction=args.send_fraction,
         interpret=not on_tpu(),
     )
+    t0 = time.time()
+    v, bundle = build_variant(args.variant, g, **opts)
+    r = v.run(bundle, threshold=args.threshold,
+              handle_dangling=args.handle_dangling, **opts)
     pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)
     wall = time.time() - t0
 
@@ -62,8 +71,12 @@ def main(argv=None) -> int:
     print(f"L1 vs sequential(1e-12, {it_seq} iters): {l1_norm(pr, ref):.3e}")
     print(f"top-5 ranks: {np.argsort(pr)[::-1][:5].tolist()}")
     if args.ckpt:
-        SolverCheckpoint(pr=pr, round=iters, n=g.n, p=args.threads).save(args.ckpt)
-        print(f"checkpointed to {args.ckpt}.npz")
+        # record the partition count actually baked into the bundle (1 for
+        # unpartitioned variants) — NOT --threads: reshard-on-load must not
+        # assume a partition layout the solve never used
+        SolverCheckpoint(pr=pr, round=iters, n=g.n,
+                         p=bundle_partitions(bundle)).save(args.ckpt)
+        print(f"checkpointed to {args.ckpt}.npz (p={bundle_partitions(bundle)})")
     return 0
 
 

@@ -54,9 +54,15 @@ def test_registry_contains_all_paper_variants():
     assert names >= {
         "sequential", "barrier", "barrier_edge", "barrier_opt",
         "barrier_identical", "nosync", "nosync_opt", "pallas", "pallas_nosync",
+        # PR-2 registrations: pod-scale modes + perforated Pallas
+        "distributed_barrier", "distributed_stale", "distributed_topk",
+        "pallas_nosync_opt",
     }
     for n in names:
-        assert get_variant(n).description
+        v = get_variant(n)
+        # benchmarks/launcher drive bundle sharing, interpret flagging and
+        # the cost model from this metadata — it must always be set
+        assert v.description and v.layout and v.backend and v.schedule
 
 
 def test_unknown_variant_raises():
@@ -93,13 +99,11 @@ def test_registry_round_trip_matches_oracle(gname, vname):
 
 
 @pytest.mark.parametrize("gname", sorted(SURROGATES))
-@pytest.mark.parametrize(
-    "vname", ["barrier", "barrier_edge", "barrier_identical", "nosync",
-              "pallas", "pallas_nosync"],
-)
+@pytest.mark.parametrize("vname", sorted(set(list_variants()) - {"sequential"}))
 def test_registry_round_trip_with_dangling(gname, vname):
-    """Same fixed point with dangling-mass redistribution — the satellite
-    that used to silently drop handle_dangling on most variants."""
+    """Registry invariant: EVERY non-sequential variant round-trips through
+    solve_variant with handle_dangling=True to the oracle's redistributed
+    fixed point — the distributed solvers used to silently drop the flag."""
     g = SURROGATES[gname]()
     ref, _ = pagerank_numpy(g, threshold=1e-12, handle_dangling=True)
     r = solve_variant(vname, g, threshold=THRESH, handle_dangling=True, **OPTS)
@@ -120,11 +124,56 @@ def test_pallas_nosync_iterations_not_worse_fig7():
     assert int(rn.iterations) <= int(rb.iterations)
 
 
+def test_pallas_nosync_opt_iterations_not_worse():
+    """Acceptance: the perforated blocked-GS schedule needs no more engine
+    iterations than the unperforated one (freezing can only shed work), and
+    stays on the oracle's fixed point."""
+    g = rmat_graph(9, avg_degree=6, seed=1)
+    ref, _ = pagerank_numpy(g, threshold=1e-12)
+    base = solve_variant("pallas_nosync", g, threshold=1e-7, **OPTS)
+    opt = solve_variant("pallas_nosync_opt", g, threshold=1e-7, **OPTS)
+    assert int(opt.iterations) <= int(base.iterations)
+    assert l1_norm(opt.pr, ref) < 1e-3
+
+
 def test_pallas_rejects_unknown_schedule():
     g = rmat_graph(6, avg_degree=4, seed=0)
     pgk = PallasGraph.build(g, block=64, tile_cap=128)
     with pytest.raises(ValueError, match="schedule"):
         pagerank_pallas(pgk, schedule="warp")
+
+
+def test_pallas_perforate_requires_nosync():
+    g = rmat_graph(6, avg_degree=4, seed=0)
+    pgk = PallasGraph.build(g, block=64, tile_cap=128)
+    with pytest.raises(ValueError, match="perforate"):
+        pagerank_pallas(pgk, schedule="barrier", perforate=True)
+
+
+def test_gs_pass_respects_freeze_mask():
+    """The spmv_gs_pass freeze-mask operand: frozen vertices hold their rank
+    through a pass; an all-zero mask reproduces the unfrozen pass exactly."""
+    import jax.numpy as jnp
+
+    from repro.kernels.spmv import spmv_gs_pass
+
+    g = rmat_graph(7, avg_degree=5, seed=2)
+    pgk = PallasGraph.build(g, block=64, tile_cap=128)
+    n_blocks, block = pgk.inv_out_blocks.shape
+    n_pad = n_blocks * block
+    vmask = (jnp.arange(n_pad) < g.n).astype(jnp.float32).reshape(n_blocks, block)
+    pr0 = jnp.full((n_blocks, block), 1.0 / g.n, jnp.float32) * vmask
+    params = jnp.asarray([[0.15 / g.n, 0.85]], jnp.float32)
+    args = (pgk.tiles_src_local, pgk.tiles_dst_local, pgk.tiles_valid,
+            pgk.tile_src_block, pgk.tile_dst_block)
+    frozen_none = jnp.zeros_like(vmask)
+    frozen_all = vmask  # freeze every real vertex
+    out_unfrozen = spmv_gs_pass(pr0, pgk.inv_out_blocks, vmask, frozen_none,
+                                params, *args, block=block, interpret=True)
+    out_frozen = spmv_gs_pass(pr0, pgk.inv_out_blocks, vmask, frozen_all,
+                              params, *args, block=block, interpret=True)
+    assert float(jnp.max(jnp.abs(out_frozen - pr0))) == 0.0
+    assert float(jnp.max(jnp.abs(out_unfrozen - pr0))) > 0.0
 
 
 def test_nosync_thread_level_termination_safe():
