@@ -15,6 +15,19 @@ python -m repro.launch.pagerank_run --list
 echo "== smoke: pallas_nosync launcher =="
 python -m repro.launch.pagerank_run --variant pallas_nosync --scale-down 2048
 
+echo "== smoke: barrier_sticd launcher (decomposition plan) =="
+python -m repro.launch.pagerank_run --variant barrier_sticd --scale-down 2048
+
+echo "== docs smoke: README variant table covers the registry =="
+python - <<'EOF'
+from repro.core.solver import list_variants
+
+readme = open("README.md", encoding="utf-8").read()
+missing = [v for v in list_variants() if f"`{v}`" not in readme]
+assert not missing, f"README.md variant table is missing: {missing}"
+print(f"README.md covers all {len(list_variants())} registry variants")
+EOF
+
 echo "== perf trajectory: BENCH_variants.json (quick, 1 dataset) =="
 python -m benchmarks.bench_variants --datasets webStanford --scale-down 2048 \
     --json BENCH_variants.json

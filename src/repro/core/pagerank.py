@@ -27,6 +27,12 @@ Variant map (paper §4 → registry name → composition):
                           SpMV sweep on either schedule (plus the perforated
                           fresh-read form); registered from
                           ``repro.kernels.spmv.ops``.
+* ``barrier_sticd``/``nosync_sticd`` — the full STIC-D decomposition
+                          (identical rewiring + chain/dead pruning,
+                          ``repro.graphs.csr.DecompositionPlan``) as a build-
+                          time plan stage in front of the Alg-1/Alg-3 core
+                          solve; ranks of pruned vertices are reconstructed
+                          after convergence (``solver.plan_run``).
 * ``distributed_barrier``/``distributed_stale``/``distributed_topk`` — the
                           shard_map pod-scale modes; registered from
                           ``repro.core.distributed``.
@@ -50,6 +56,8 @@ from repro.core.solver import (
     barrier_schedule,
     nosync_schedule,
     perforation,
+    plan_build,
+    plan_run,
     register_variant,
     solve,
 )
@@ -521,4 +529,23 @@ register_variant(
     description="Alg 3 + Alg 5 loop perforation",
     options=("thread_level",),
     layout="partitioned", backend="jax", schedule="nosync",
+)
+# STIC-D decomposition as a plan stage (identical+chain+dead pruned at build,
+# reconstructed after the core converges).  The plan composes with ANY inner
+# build — plan first, partition/block the core second — these two entries are
+# the paper's Alg-4 completion on both schedules.
+register_variant(
+    "barrier_sticd",
+    build=plan_build("barrier"),
+    run=plan_run,
+    description="STIC-D plan (identical+chain+dead pruned) + Alg-1 barrier core solve",
+    layout="sticd_device", backend="jax", schedule="barrier",
+)
+register_variant(
+    "nosync_sticd",
+    build=plan_build("nosync"),
+    run=plan_run,
+    description="STIC-D plan + Alg-3 no-sync core solve (core graph partitioned)",
+    options=("thread_level",),
+    layout="sticd_partitioned", backend="jax", schedule="nosync",
 )

@@ -32,6 +32,7 @@ from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 DEFAULT_DAMPING = 0.85
 
@@ -227,7 +228,9 @@ class Variant:
       produce identical bundles from identical build opts, so benchmarks
       build once per layout and share it (``"device"``, ``"edge"``,
       ``"identical"``, ``"partitioned"``, ``"blocked"``, ``"distributed"``,
-      ``"host"``; empty = private layout, never shared).
+      ``"host"``, and the plan-staged ``"sticd_*"`` layouts — distinct per
+      inner variant since the bundle embeds it; empty = private layout,
+      never shared).
     * ``backend`` — what executes the sweeps: ``"numpy"`` (host oracle),
       ``"jax"`` (jitted single-device), ``"pallas"`` (Pallas kernels — run
       interpreted off-TPU, and benchmarks flag that), ``"shard_map"``
@@ -268,6 +271,26 @@ def register_variant(name: str, build: Callable, run: Callable,
                      layout: str = "",
                      backend: str = "jax",
                      schedule: str = "barrier") -> Variant:
+    """Register a PageRank variant under ``name`` and return the record.
+
+    ``build(g, **opts)`` maps a host :class:`repro.graphs.csr.Graph` to the
+    variant's device bundle; ``run(bundle, *, d, threshold, max_iter,
+    handle_dangling, **opts)`` solves it to a :class:`PageRankResult` whose
+    ``pr`` is the **full-length** rank vector (a plan-staged build that
+    shrinks the graph must reconstruct before returning — see
+    :func:`plan_build` / :func:`plan_run`).  Both callables must tolerate
+    the transport options they don't use (accept ``**_``).
+
+    ``description`` is user-facing (``pagerank_run --list`` and the README
+    variant table print it verbatim); ``options`` declares extra run options
+    beyond the transport set (anything else raises in :func:`build_variant`);
+    ``layout``/``backend``/``schedule`` are the metadata triple the generic
+    drivers dispatch on — see :class:`Variant` for the vocabulary.  All four
+    metadata strings are asserted non-empty by the registry tests.
+
+    Registration normally happens at import time of the defining module;
+    add new modules to ``_ensure_registered`` so enumeration sees them.
+    """
     v = Variant(name=name, build=build, run=run, description=description,
                 options=options, layout=layout, backend=backend,
                 schedule=schedule)
@@ -324,6 +347,95 @@ def bundle_partitions(bundle) -> int:
     solve resharded on load as if it had 56 partitions pads the rank vector
     to a layout that was never used)."""
     return int(getattr(bundle, "p", 1))
+
+
+# ---------------------------------------------------------------------------
+# Plan stage: build-time graph decomposition in front of any inner variant
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PlannedBundle:
+    """Bundle of a plan-staged variant: the STIC-D decomposition plan plus
+    the *inner* variant's bundle built from the plan's core graph.
+
+    ``bundle`` is ``None`` when the plan pruned every vertex (the core is
+    empty — e.g. a zero-edge graph is all-dead); :func:`plan_run` then skips
+    the inner solve and the reconstruction pass produces the whole vector.
+    """
+
+    plan: Any  # repro.graphs.csr.DecompositionPlan
+    inner: Variant
+    bundle: Any
+
+    @property
+    def p(self) -> int:
+        # Checkpoints record the layout of the vector they store.  plan_run
+        # returns the FULL-LENGTH reconstructed vector, which was never
+        # sharded (only the core bundle was), so the checkpoint must say
+        # "unpartitioned" — reshard-on-load must not slice the full vector
+        # into the core bundle's partition layout.
+        return 1
+
+
+def plan_build(inner: str, **plan_opts) -> Callable:
+    """Build-protocol stage: decompose first, build ``inner`` on the core.
+
+    Returns a ``build(g, **opts)`` suitable for :func:`register_variant`:
+    it runs :meth:`repro.graphs.csr.DecompositionPlan.from_graph` (with
+    ``plan_opts`` — e.g. ``identical=False``) and hands ``plan.core`` to the
+    inner variant's build, so partitioning/blocking happens on the shrunken
+    graph ("plan first, partition the core second").
+    """
+
+    def build(g, **opts):
+        from repro.graphs.csr import DecompositionPlan
+
+        plan = DecompositionPlan.from_graph(g, **plan_opts)
+        v = get_variant(inner)
+        bundle = v.build(plan.core, **opts) if plan.core.n else None
+        return PlannedBundle(plan=plan, inner=v, bundle=bundle)
+
+    return build
+
+
+def plan_run(
+    b: PlannedBundle,
+    *,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 10_000,
+    handle_dangling: bool = False,
+    **opts,
+) -> PageRankResult:
+    """Run fn of every plan-staged variant: inner solve + reconstruction.
+
+    The inner variant always solves the core with ``handle_dangling=False``
+    — dangling redistribution is applied in closed form at reconstruction
+    (the redistributed fixed point is the plain one normalised to unit L1
+    mass), which keeps pruned sinks' mass exact without a feedback loop
+    between the core solve and the pruned region.
+    """
+    if b.bundle is None:  # fully-pruned graph: reconstruction does it all
+        it, err = np.asarray(0, np.int32), np.asarray(0.0)
+        core_pr = np.zeros(0, dtype=np.float64)
+    else:
+        r = b.inner.run(b.bundle, d=d, threshold=threshold, max_iter=max_iter,
+                        handle_dangling=False, **opts)
+        it, err = r.iterations, r.err
+        core_pr = np.asarray(r.pr, dtype=np.float64)
+    pr = b.plan.reconstruct(core_pr, d=d, handle_dangling=handle_dangling)
+    return PageRankResult(pr, it, err)
+
+
+def plan_stats(bundle) -> dict | None:
+    """Decomposition counters of a built bundle (``None`` when unplanned).
+    The launcher prints these and ``bench_variants --json`` records them, so
+    the preprocessing payoff (core vs full size) is visible, not just wall
+    time."""
+    if isinstance(bundle, PlannedBundle):
+        return bundle.plan.stats()
+    return None
 
 
 def solve_variant(

@@ -1,10 +1,16 @@
-from repro.graphs.csr import Graph, BlockedCOO, build_blocked_coo
+from repro.graphs.csr import (
+    Graph,
+    BlockedCOO,
+    DecompositionPlan,
+    build_blocked_coo,
+)
 from repro.graphs.rmat import rmat_graph
 from repro.graphs.datasets import DATASETS, make_dataset
 
 __all__ = [
     "Graph",
     "BlockedCOO",
+    "DecompositionPlan",
     "build_blocked_coo",
     "rmat_graph",
     "DATASETS",

@@ -14,6 +14,21 @@ from typing import Optional
 import numpy as np
 
 
+def _concat_ranges(ptr: np.ndarray, verts: np.ndarray) -> np.ndarray:
+    """Concatenated CSR index ranges ``ptr[v]:ptr[v+1]`` for each v in verts.
+
+    The decomposition analyses propagate frontiers with this so each wave
+    touches only the edges incident to the previous wave — O(n+m) total
+    instead of one full edge scan per wave (quadratic on deep chains)."""
+    starts = ptr[verts]
+    lens = (ptr[verts + 1] - starts).astype(np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    off = np.repeat(starts - np.r_[0, np.cumsum(lens)[:-1]], lens)
+    return off + np.arange(total, dtype=np.int64)
+
+
 @dataclasses.dataclass
 class Graph:
     """Host-side immutable graph in dst-sorted COO + CSR-by-destination.
@@ -81,6 +96,65 @@ class Graph:
             cls_of[u] = keys.setdefault(key, len(keys))
         return cls_of
 
+    def chain_nodes(self) -> np.ndarray:
+        """STIC-D 'chain nodes': (n,) bool mask of in-degree-1/out-degree-1
+        path vertices whose rank is a closed form of the chain head's rank.
+
+        A vertex ``v`` with a single in-neighbour ``u`` satisfies
+        ``pr(v) = (1-d)/n + d * pr(u) / outdeg(u)`` exactly, so a run of
+        indeg-1/outdeg-1 vertices is an affine (geometric) function of the
+        first non-chain ancestor — the *head*.  Members of pure indeg-1/
+        outdeg-1 cycles have no head (the walk never leaves the cycle) and
+        are excluded: their ranks are genuinely iterative.
+        """
+        indeg = np.diff(self.in_ptr)
+        cand = (indeg == 1) & (self.out_degree == 1)
+        ok = np.zeros(self.n, dtype=bool)
+        if not cand.any():
+            return ok
+        cidx = np.flatnonzero(cand)
+        pred = self.src[self.in_ptr[:-1][cidx]]  # the single in-edge
+        # propagate headed-ness down the chains, frontier by frontier (a
+        # candidate successor's only predecessor IS the frontier vertex, so
+        # it becomes headed); cycle members never acquire it
+        ok[cidx] = ~cand[pred]
+        out_ptr, out_dst, _ = self.out_csr()
+        frontier = np.flatnonzero(ok)
+        while frontier.size:
+            succ = out_dst[_concat_ranges(out_ptr, frontier)]
+            newly = np.unique(succ[cand[succ] & ~ok[succ]])
+            ok[newly] = True
+            frontier = newly
+        return ok
+
+    def dead_nodes(self) -> np.ndarray:
+        """STIC-D 'dead nodes': (n,) bool mask of vertices from which every
+        forward path ends in a sink — the least fixed point of "out-degree 0,
+        or all out-neighbours dead".
+
+        Dead vertices influence no live vertex's rank (their mass never flows
+        back), so they can be pruned from the iteration and their ranks
+        back-propagated in one topological pass after the core converges.
+        Cycles are never marked (a cycle member always has a live successor),
+        so the dead set induces a DAG and the back-propagation is well-defined.
+        """
+        dead = self.out_degree == 0
+        frontier = np.flatnonzero(dead)
+        if frontier.size == 0:
+            return dead
+        # Kahn-style peel: live_out[u] counts u's edges to live vertices;
+        # each death decrements its in-neighbours, so every edge is touched
+        # once overall.
+        live_out = self.out_degree.astype(np.int64)
+        while frontier.size:
+            srcs = self.src[_concat_ranges(self.in_ptr, frontier)]
+            np.subtract.at(live_out, srcs, 1)
+            touched = np.unique(srcs)
+            newly = touched[(live_out[touched] == 0) & ~dead[touched]]
+            dead[newly] = True
+            frontier = newly
+        return dead
+
     def partition_ranges(self, p: int, edge_balanced: bool = True) -> np.ndarray:
         """(p+1,) vertex boundaries. Paper uses static equal-vertex partitions;
         we default to edge-balanced boundaries (fixes their load-skew issue).
@@ -111,6 +185,221 @@ def inv_out_and_dangling(out_degree: np.ndarray, n_pad: Optional[int] = None):
     dang = np.zeros(size, dtype=np.float64)
     dang[:n] = out_degree == 0
     return inv, dang
+
+
+# ---------------------------------------------------------------------------
+# STIC-D build-time decomposition: shrink the graph to its iterative core
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DecompositionPlan:
+    """Build-time STIC-D decomposition: prune identical/chain/dead vertices
+    out of the iteration, solve the shrunken *core*, reconstruct afterwards.
+
+    The core is an ordinary :class:`Graph` (with the **full-graph**
+    out-degrees retained, so 1/outdeg contributions are unchanged), which is
+    what makes the plan composable with every registered variant: plan first,
+    then hand ``plan.core`` to any ``build`` — partitioned, blocked-Pallas,
+    distributed — and the solve runs on the smaller problem unchanged.
+
+    Three vertex classes are removed, all exactly (same fixed point):
+
+    * **identical** — non-representative members of an identical-in-neighbour
+      class (:meth:`Graph.in_neighbor_classes`) whose out-degree matches the
+      representative's.  Their rank equals the representative's, so their
+      out-edges are *rewired* to the representative (same ``pr(src)/outdeg``
+      contribution) and the member drops out of the core entirely.
+    * **chain** — indeg-1/outdeg-1 paths (:meth:`Graph.chain_nodes`): rank is
+      a closed form of the head, restored by the reconstruction pass.
+    * **dead** — the sink closure (:meth:`Graph.dead_nodes`): rank is
+      back-propagated in topological waves once the core has converged.
+
+    Only vertices that cannot influence the core are structurally pruned (the
+    closure drops any chain whose path re-enters the core — a mid-graph chain
+    contraction would need weighted edges, which a plain :class:`Graph`
+    cannot express), so chain pruning covers chains that drain into the dead
+    region; identical rewiring prunes vertices anywhere in the graph.
+
+    Dangling redistribution composes in closed form: the redistributed fixed
+    point is the plain fixed point normalised to unit L1 mass (sum both sides
+    of ``pr = (1-d)/n + d·Aᵀpr + (d/n)(1ᵀ_dang pr)`` to see the scalar
+    relation), so the core always solves with ``handle_dangling=False`` and
+    :meth:`reconstruct` normalises at the end.  Likewise the core solve's
+    ``(1-d)/n_core`` base is rescaled by linearity: the full-graph restriction
+    is ``core_pr · n_core / n``.
+    """
+
+    n: int
+    core: Graph  # shrunken graph; out_degree holds FULL-graph degrees
+    core_index: np.ndarray  # (n_core,) full-graph ids of core vertices
+    full_to_core: np.ndarray  # (n,) core slot per vertex, -1 if pruned
+    struct_pruned: np.ndarray  # (n,) bool — chain/dead closure
+    chain_mask: np.ndarray  # (n,) bool — Graph.chain_nodes() analysis
+    dead_mask: np.ndarray  # (n,) bool — Graph.dead_nodes() analysis
+    ident_members: np.ndarray  # (k,) full ids pruned by identical rewiring
+    ident_reps: np.ndarray  # (k,) their (core) representatives
+    full: Graph  # original graph — reconstruction reads its edges
+
+    @property
+    def pruned(self) -> np.ndarray:
+        """(n,) bool mask of every vertex the core solve does not iterate."""
+        out = self.struct_pruned.copy()
+        out[self.ident_members] = True
+        return out
+
+    @classmethod
+    def from_graph(cls, g: Graph, identical: bool = True, chains: bool = True,
+                   dead: bool = True) -> "DecompositionPlan":
+        n = g.n
+        chain_mask = g.chain_nodes() if chains else np.zeros(n, dtype=bool)
+        dead_mask = g.dead_nodes() if dead else np.zeros(n, dtype=bool)
+        # Structural prune closure: a pruned vertex must not feed a core
+        # vertex, so drop candidates with an out-edge leaving the set until
+        # none remain (the dead set is already closed; chains shrink to the
+        # suffixes that drain into it).
+        s = chain_mask | dead_mask
+        if s.any():
+            escaping = np.unique(g.src[s[g.src] & ~s[g.dst]])
+            while escaping.size:
+                s[escaping] = False
+                # a member with an edge into a just-removed vertex escapes too
+                srcs = np.unique(g.src[_concat_ranges(g.in_ptr, escaping)])
+                escaping = srcs[s[srcs]]
+        struct_pruned = s
+
+        # Identical rewiring: members of an in-neighbour class share the
+        # representative's rank; equal out-degree makes the rewired edge
+        # contribution pr(rep)/outdeg(rep) == pr(member)/outdeg(member).
+        rewire = np.arange(n, dtype=np.int64)
+        ident_members: list[int] = []
+        ident_reps: list[int] = []
+        if identical and n:
+            cls_of = g.in_neighbor_classes()
+            order = np.argsort(cls_of, kind="stable")
+            bounds = np.flatnonzero(
+                np.r_[True, cls_of[order][1:] != cls_of[order][:-1], True]
+            )
+            for lo, hi in zip(bounds[:-1], bounds[1:]):
+                members = order[lo:hi]
+                members = members[~struct_pruned[members]]
+                if members.size < 2:
+                    continue
+                rep = int(members[0])
+                for m in members[1:]:
+                    if g.out_degree[m] == g.out_degree[rep]:
+                        ident_members.append(int(m))
+                        ident_reps.append(rep)
+                        rewire[m] = rep
+        ident_members_a = np.asarray(ident_members, dtype=np.int64)
+        ident_reps_a = np.asarray(ident_reps, dtype=np.int64)
+
+        pruned = struct_pruned.copy()
+        pruned[ident_members_a] = True
+        full_to_core = np.full(n, -1, dtype=np.int64)
+        core_index = np.flatnonzero(~pruned)
+        full_to_core[core_index] = np.arange(core_index.size)
+
+        if pruned.any():
+            # keep edges into core vertices; rewire identical-member sources.
+            # (a struct-pruned source implies a pruned destination, so every
+            # surviving source maps into the core by construction.)
+            keep = ~pruned[g.dst]
+            src2 = rewire[g.src[keep]]
+            core = Graph.from_edges(
+                int(core_index.size),
+                full_to_core[src2].astype(np.int32),
+                full_to_core[g.dst[keep]].astype(np.int32),
+            )
+            # contributions divide by the FULL graph's out-degree: a core
+            # vertex keeps leaking mass to its pruned out-neighbours.
+            core.out_degree = g.out_degree[core_index].copy()
+        else:
+            core = g
+        return cls(
+            n=n, core=core, core_index=core_index, full_to_core=full_to_core,
+            struct_pruned=struct_pruned, chain_mask=chain_mask,
+            dead_mask=dead_mask, ident_members=ident_members_a,
+            ident_reps=ident_reps_a, full=g,
+        )
+
+    def stats(self) -> dict:
+        """Preprocessing payoff counters (recorded by ``bench_variants``)."""
+        n_ident = int(self.ident_members.size)
+        chain = int((self.struct_pruned & self.chain_mask).sum())
+        dead = int((self.struct_pruned & ~self.chain_mask).sum())
+        return {
+            "full_n": self.n,
+            "full_m": self.full.m,
+            "core_n": self.core.n,
+            "core_m": self.core.m,
+            "pruned_identical": n_ident,
+            "pruned_chain": chain,
+            "pruned_dead": dead,
+        }
+
+    def reconstruct(self, core_pr, d: float = 0.85,
+                    handle_dangling: bool = False) -> np.ndarray:
+        """Restore the full-length rank vector from the core solution.
+
+        ``core_pr`` is the inner solve of :attr:`core` run with its own
+        ``(1-d)/n_core`` base and ``handle_dangling=False``.  Steps: rescale
+        to the full-graph base by linearity, copy identical members from
+        their representatives, back-propagate chain/dead ranks in topological
+        waves (each wave computes every pruned vertex whose in-neighbours are
+        all known), and finally — iff ``handle_dangling`` — normalise to unit
+        mass, which *is* the redistributed fixed point in closed form.
+        """
+        g = self.full
+        n = self.n
+        pr = np.zeros(n, dtype=np.float64)
+        if n == 0:
+            return pr
+        core_pr = np.asarray(core_pr, dtype=np.float64)
+        if core_pr.shape != (self.core.n,):
+            raise ValueError(
+                f"core_pr has shape {core_pr.shape}, expected ({self.core.n},)"
+            )
+        if self.core.n:
+            pr[self.core_index] = core_pr * (self.core.n / n)
+        pr[self.ident_members] = pr[self.ident_reps]
+
+        inv_out, _ = inv_out_and_dangling(g.out_degree)
+        base = (1.0 - d) / n
+        # Kahn topological pass: unknown_in counts in-edges from not-yet-
+        # computed (struct-pruned) sources; a vertex is ready at zero, and
+        # completing it decrements its successors — each edge touched once.
+        struct = self.struct_pruned
+        unknown_in = np.bincount(g.dst[struct[g.src]], minlength=n)
+        done = np.zeros(n, dtype=bool)
+        n_done = 0
+        out_ptr, out_dst, _ = g.out_csr()
+        ready = np.flatnonzero(struct & (unknown_in == 0))
+        while ready.size:
+            idx = _concat_ranges(g.in_ptr, ready)
+            srcs = g.src[idx]
+            lens = g.in_ptr[ready + 1] - g.in_ptr[ready]
+            seg = np.repeat(np.arange(ready.size), lens)
+            acc = np.bincount(seg, weights=pr[srcs] * inv_out[srcs],
+                              minlength=ready.size)
+            pr[ready] = base + d * acc
+            done[ready] = True
+            n_done += ready.size
+            succ = out_dst[_concat_ranges(out_ptr, ready)]
+            np.subtract.at(unknown_in, succ, 1)
+            touched = np.unique(succ)
+            ready = touched[struct[touched] & ~done[touched]
+                            & (unknown_in[touched] == 0)]
+        if n_done != int(struct.sum()):
+            raise AssertionError(
+                "decomposition reconstruction stalled: pruned set has a "
+                "cycle (chain_nodes/dead_nodes invariant violated)"
+            )
+        if handle_dangling:
+            total = pr.sum()
+            if total > 0:
+                pr = pr / total
+        return pr
 
 
 @dataclasses.dataclass

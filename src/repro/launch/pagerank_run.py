@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core import SolverCheckpoint, l1_norm, pagerank_numpy
 from repro.core.solver import (
-    build_variant, bundle_partitions, get_variant, list_variants,
+    build_variant, bundle_partitions, get_variant, list_variants, plan_stats,
 )
 from repro.graphs import DATASETS, make_dataset
 from repro.utils.jaxcompat import on_tpu
@@ -62,6 +62,11 @@ def main(argv=None) -> int:
     )
     t0 = time.time()
     v, bundle = build_variant(args.variant, g, **opts)
+    ps = plan_stats(bundle)
+    if ps:
+        print(f"plan: core n={ps['core_n']} m={ps['core_m']} "
+              f"(pruned identical={ps['pruned_identical']} "
+              f"chain={ps['pruned_chain']} dead={ps['pruned_dead']})")
     r = v.run(bundle, threshold=args.threshold,
               handle_dangling=args.handle_dangling, **opts)
     pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)

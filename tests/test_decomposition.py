@@ -1,0 +1,223 @@
+"""STIC-D decomposition round-trip tier.
+
+Covers the `Graph.chain_nodes`/`dead_nodes` analyses (empty graph, pure
+cycle, chain into a dangling vertex, chain crossing a partition boundary),
+identical-member rewiring, and the `DecompositionPlan` acceptance criteria:
+`barrier_sticd`/`nosync_sticd` match the sequential oracle at L1 < 1e-5 on
+chain/sink-heavy synthetic graphs and on webStanford scale-down, with the
+reconstruction pass covering every pruned vertex, and the plan composing
+with the Pallas and distributed bundles (plan first, partition second).
+"""
+import numpy as np
+import pytest
+
+from repro.core import l1_norm, pagerank_numpy
+from repro.core.solver import plan_build, plan_run, plan_stats, solve_variant
+from repro.graphs import DecompositionPlan, make_dataset
+from repro.graphs.csr import Graph
+
+THRESH = 1e-9
+D = 0.85
+STICD = ("barrier_sticd", "nosync_sticd")
+
+
+def chain_sink_heavy_graph(n_core: int = 24, chain_len: int = 30,
+                           n_sinks: int = 20, seed: int = 5) -> Graph:
+    """Engineered decomposition workload: a dense live core feeding a long
+    chain that ends in a dangling vertex, plus a fringe of pure sinks."""
+    rng = np.random.default_rng(seed)
+    edges = [(u, (u + 1) % n_core) for u in range(n_core)]  # live cycle
+    edges += [(int(rng.integers(0, n_core)), int(rng.integers(0, n_core)))
+              for _ in range(4 * n_core)]
+    chain0 = n_core
+    edges.append((0, chain0))
+    edges += [(chain0 + i, chain0 + i + 1) for i in range(chain_len)]
+    sink0 = chain0 + chain_len + 1  # the chain's terminal vertex is a sink
+    edges += [(int(rng.integers(0, n_core)), sink0 + 1 + i)
+              for i in range(n_sinks)]
+    n = sink0 + 1 + n_sinks
+    src, dst = zip(*edges)
+    return Graph.from_edges(n, np.asarray(src), np.asarray(dst))
+
+
+# ---------------------------------------------------------------------------
+# analysis edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_empty_graph():
+    g = Graph.from_edges(0, np.zeros(0, np.int32), np.zeros(0, np.int32))
+    assert g.chain_nodes().shape == (0,) and g.dead_nodes().shape == (0,)
+    plan = DecompositionPlan.from_graph(g)
+    assert plan.core.n == 0
+    assert plan.reconstruct(np.zeros(0), d=D).shape == (0,)
+    r = solve_variant("barrier_sticd", g, threshold=THRESH)
+    assert r.pr.shape == (0,) and int(r.iterations) == 0
+
+
+def test_pure_cycle_has_no_chain_head():
+    """Every vertex is indeg-1/outdeg-1, but the backward walk never leaves
+    the cycle: no head exists, nothing is prunable, the core is the graph."""
+    g = Graph.from_edges(5, np.arange(5), (np.arange(5) + 1) % 5)
+    assert not g.chain_nodes().any()
+    assert not g.dead_nodes().any()
+    plan = DecompositionPlan.from_graph(g)
+    assert plan.core is g  # nothing pruned: the plan reuses the graph
+    ref, _ = pagerank_numpy(g, threshold=1e-13)
+    r = solve_variant("barrier_sticd", g, threshold=THRESH)
+    assert l1_norm(r.pr, ref) < 1e-6
+
+
+def test_self_loop_not_a_chain():
+    # 0 -> 0 plus a live 1<->2 cycle: the self-loop is its own predecessor
+    g = Graph.from_edges(3, np.asarray([0, 1, 2]), np.asarray([0, 2, 1]))
+    assert not g.chain_nodes().any()
+    assert not g.dead_nodes().any()
+
+
+def test_chain_into_dangling_vertex_closed_form():
+    """head(0) -> c1(1) -> c2(2) -> sink(3), head kept live via a 2-cycle.
+
+    The chain interior is indeg-1/outdeg-1; the whole tail is in the dead
+    closure; reconstruction must reproduce the closed form
+    pr(c_{i+1}) = (1-d)/n + d * pr(c_i) / outdeg(c_i)."""
+    edges = [(0, 4), (4, 0), (0, 1), (1, 2), (2, 3)]
+    src, dst = zip(*edges)
+    g = Graph.from_edges(5, np.asarray(src), np.asarray(dst))
+    chain = g.chain_nodes()
+    assert chain[1] and chain[2]          # interior of the chain
+    assert not chain[3] and not chain[0]  # sink has outdeg 0; head has 2
+    dead = g.dead_nodes()
+    assert dead[1] and dead[2] and dead[3] and not dead[0]
+
+    plan = DecompositionPlan.from_graph(g)
+    assert set(np.flatnonzero(plan.pruned)) == {1, 2, 3}
+    ref, _ = pagerank_numpy(g, threshold=1e-14)
+    r = solve_variant("barrier_sticd", g, threshold=1e-10)
+    pr = np.asarray(r.pr, np.float64)
+    assert l1_norm(pr, ref) < 1e-6
+    base = (1.0 - D) / g.n
+    # closed form down the chain: head pays 1/outdeg(head), chain links 1/1
+    assert pr[1] == pytest.approx(base + D * pr[0] / 2, rel=1e-9)
+    assert pr[2] == pytest.approx(base + D * pr[1], rel=1e-9)
+    assert pr[3] == pytest.approx(base + D * pr[2], rel=1e-9)
+
+
+def test_chain_crossing_partition_boundary():
+    """nosync_sticd with threads=4: the pruned chain's ids span what would be
+    several partitions; the core is partitioned *after* the plan, and the
+    reconstruction covers the chain regardless of boundaries."""
+    g = chain_sink_heavy_graph(n_core=24, chain_len=40, n_sinks=8)
+    plan = DecompositionPlan.from_graph(g)
+    s = plan.stats()
+    assert s["pruned_chain"] >= 40
+    ref, _ = pagerank_numpy(g, threshold=1e-13)
+    r = solve_variant("nosync_sticd", g, threshold=THRESH, threads=4)
+    assert l1_norm(r.pr, ref) < 1e-5
+
+
+def test_identical_members_rewired_into_core():
+    """Twins with equal in-neighbour sets and equal out-degree are pruned
+    even though they feed live vertices (out-edges rewired to the rep)."""
+    edges = [(0, 1), (1, 2), (2, 0),              # live cycle
+             (0, 3), (1, 3), (0, 4), (1, 4),      # identical twins 3, 4
+             (3, 0), (4, 2)]                      # both outdeg 1, feeding core
+    src, dst = zip(*edges)
+    g = Graph.from_edges(5, np.asarray(src), np.asarray(dst))
+    plan = DecompositionPlan.from_graph(g)
+    assert plan.stats()["pruned_identical"] == 1
+    assert plan.core.n == 4
+    # the rewired core keeps the full-graph out-degrees for 1/outdeg weights
+    assert np.array_equal(plan.core.out_degree,
+                          g.out_degree[plan.core_index])
+    for hd in (False, True):
+        ref, _ = pagerank_numpy(g, threshold=1e-13, handle_dangling=hd)
+        r = solve_variant("barrier_sticd", g, threshold=1e-10,
+                          handle_dangling=hd)
+        assert l1_norm(r.pr, ref) < 1e-6
+
+
+def test_zero_edge_graph_fully_pruned():
+    """Every vertex is a sink: the core is empty and reconstruction alone
+    produces the uniform fixed point (normalised under dangling)."""
+    n = 40
+    g = Graph.from_edges(n, np.zeros(0, np.int32), np.zeros(0, np.int32))
+    plan = DecompositionPlan.from_graph(g)
+    assert plan.core.n == 0 and plan.pruned.all()
+    for hd in (False, True):
+        ref, _ = pagerank_numpy(g, threshold=1e-13, handle_dangling=hd)
+        for vname in STICD:
+            r = solve_variant(vname, g, threshold=THRESH, threads=4,
+                              handle_dangling=hd)
+            assert l1_norm(r.pr, ref) < 1e-9
+            assert int(r.iterations) == 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: oracle round-trip on decomposition-heavy workloads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vname", STICD)
+@pytest.mark.parametrize("handle_dangling", [False, True])
+def test_sticd_matches_oracle_chain_sink_heavy(vname, handle_dangling):
+    g = chain_sink_heavy_graph()
+    plan = DecompositionPlan.from_graph(g)
+    s = plan.stats()
+    assert s["core_n"] < g.n and s["pruned_chain"] > 0 and s["pruned_dead"] > 0
+    ref, _ = pagerank_numpy(g, threshold=1e-13,
+                            handle_dangling=handle_dangling)
+    r = solve_variant(vname, g, threshold=THRESH, threads=4,
+                      handle_dangling=handle_dangling)
+    pr = np.asarray(r.pr, np.float64)
+    assert pr.shape == (g.n,)
+    assert l1_norm(pr, ref) < 1e-5
+    # reconstruction covered every pruned vertex (teleport floor is positive)
+    assert np.isfinite(pr).all() and (pr[plan.pruned] > 0).all()
+    assert np.abs(pr[plan.pruned] - ref[plan.pruned]).max() < 1e-6
+
+
+@pytest.mark.parametrize("vname", STICD)
+def test_sticd_matches_oracle_webstanford_scaledown(vname):
+    g = make_dataset("webStanford", scale_down=512)
+    plan = DecompositionPlan.from_graph(g)
+    assert plan.stats()["core_n"] < g.n  # the web surrogate has sinks
+    ref, _ = pagerank_numpy(g, threshold=1e-12)
+    r = solve_variant(vname, g, threshold=1e-8, threads=8)
+    assert l1_norm(r.pr, ref) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# composability: plan first, partition/block the core second
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("inner,opts", [
+    ("pallas_nosync", dict(block=64, tile_cap=128, interpret=True)),
+    ("distributed_barrier", dict(threads=2)),
+])
+def test_plan_composes_with_other_bundles(inner, opts):
+    """plan_build works with ANY registered inner variant: the core graph is
+    an ordinary Graph, so blocking/meshing happens on the shrunken core."""
+    g = chain_sink_heavy_graph(n_core=32, chain_len=12, n_sinks=12)
+    bundle = plan_build(inner)(g, **opts)
+    assert plan_stats(bundle)["core_n"] == bundle.plan.core.n < g.n
+    ref, _ = pagerank_numpy(g, threshold=1e-13, handle_dangling=True)
+    r = plan_run(bundle, threshold=THRESH, handle_dangling=True, **opts)
+    assert l1_norm(r.pr, ref) < 1e-5
+
+
+def test_plan_flags_select_analyses():
+    g = chain_sink_heavy_graph()
+    none = DecompositionPlan.from_graph(g, identical=False, chains=False,
+                                        dead=False)
+    assert none.core.n == g.n and not none.pruned.any()
+    full = DecompositionPlan.from_graph(g)
+    assert full.core.n < g.n
+
+
+def test_reconstruct_rejects_wrong_core_shape():
+    g = chain_sink_heavy_graph()
+    plan = DecompositionPlan.from_graph(g)
+    with pytest.raises(ValueError, match="core_pr"):
+        plan.reconstruct(np.zeros(plan.core.n + 1), d=D)

@@ -57,6 +57,8 @@ def test_registry_contains_all_paper_variants():
         # PR-2 registrations: pod-scale modes + perforated Pallas
         "distributed_barrier", "distributed_stale", "distributed_topk",
         "pallas_nosync_opt",
+        # PR-3 registrations: STIC-D decomposition plan on both schedules
+        "barrier_sticd", "nosync_sticd",
     }
     for n in names:
         v = get_variant(n)
