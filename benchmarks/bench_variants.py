@@ -117,8 +117,21 @@ def bench_records(name: str, scale_down: float = SCALE_DOWN) -> list[dict]:
             "interpreted": bool(v.backend == "pallas" and INTERPRET),
             "core_n": ps["core_n"] if ps else g.n,
             "core_m": ps["core_m"] if ps else g.m,
+            # per-round observed-error trajectory from the engine (empty for
+            # solvers that own their loop, e.g. the shard_map modes) — the
+            # artifact shows convergence curves, not just endpoints
+            "residuals": _trajectory(r, iters),
         })
     return records
+
+
+def _trajectory(r, iters: int) -> list[float]:
+    """Engine residual trajectory as a JSON-friendly list (see
+    ``PageRankResult.residuals``: inf-padded ``(max_iter,)`` buffer)."""
+    if r.residuals is None:
+        return []
+    errs = np.asarray(r.residuals, dtype=np.float64)[:iters]
+    return [float(f"{e:.4e}") for e in errs[np.isfinite(errs)]]
 
 
 def _rows(records: list[dict]) -> list[str]:

@@ -18,6 +18,36 @@ python -m repro.launch.pagerank_run --variant pallas_nosync --scale-down 2048
 echo "== smoke: barrier_sticd launcher (decomposition plan) =="
 python -m repro.launch.pagerank_run --variant barrier_sticd --scale-down 2048
 
+echo "== smoke: PPR serving engine (mixed query batch vs sequential oracle) =="
+python - <<'EOF'
+import numpy as np
+
+from repro.graphs import rmat_graph
+from repro.ppr import ppr_numpy, teleport_from_seeds
+from repro.serving.ppr_engine import PPREngine, PPRQuery
+
+g = rmat_graph(8, avg_degree=6, seed=7)
+eng = PPREngine(g, slots=4, threshold=1e-7)
+K = 8
+seed_sets = [(3,), (10, 11), (), (5,), (3,), (42, 7, 9)]
+responses = eng.drain([PPRQuery(qid=i, seeds=s, top_k=K)
+                       for i, s in enumerate(seed_sets)])
+assert len(responses) == len(seed_sets)
+for r in sorted(responses, key=lambda r: r.qid):
+    ref = ppr_numpy(g, teleport_from_seeds([r.seeds], g.n),
+                    threshold=1e-12)[0][0]
+    kth = np.sort(ref)[::-1][K - 1]
+    # tie-robust: every answered vertex must rank within the oracle's top-k
+    # value band, and its reported score must match the oracle's
+    assert (ref[r.indices] >= kth - 1e-6).all(), (r.qid, r.seeds)
+    assert np.abs(r.values - ref[r.indices]).max() < 1e-5, (r.qid, r.seeds)
+print(f"PPR serving smoke: {len(responses)} mixed queries match the oracle")
+EOF
+
+echo "== perf: BENCH_ppr.json (queries/sec + latency percentiles) =="
+python -m benchmarks.bench_ppr --scale 8 --queries 24 --slots 4 \
+    --json BENCH_ppr.json
+
 echo "== docs smoke: README variant table covers the registry =="
 python - <<'EOF'
 from repro.core.solver import list_variants

@@ -362,7 +362,7 @@ def _nosync_impl(
     pr0 = jnp.full((n_pad,), 1.0 / n, dtype)
     r = solve(step, pr0, n_units=p, threshold=threshold, max_iter=max_iter,
               track_frozen=perforate)
-    return PageRankResult(r.pr[:n], r.iterations, r.err)
+    return PageRankResult(r.pr[:n], r.iterations, r.err, r.residuals)
 
 
 def pagerank_nosync(

@@ -38,9 +38,21 @@ DEFAULT_DAMPING = 0.85
 
 
 class PageRankResult(NamedTuple):
+    """Result of one solve.
+
+    ``pr`` is the rank vector — shape ``(n,)`` for the global variants,
+    ``(b, n)`` for the batched personalized (PPR) variants.  ``residuals``,
+    when present, is the per-iteration observed-error trajectory recorded by
+    :func:`solve` (an ``inf``-padded ``(max_iter,)`` buffer — slice it with
+    ``residuals[:iterations]`` host-side); solvers that own their loop (the
+    ``shard_map`` distributed modes, the numpy oracle, the push solver) leave
+    it ``None``.
+    """
+
     pr: jax.Array
     iterations: jax.Array
     err: jax.Array
+    residuals: Any = None
 
 
 class EngineState(NamedTuple):
@@ -71,6 +83,27 @@ def perforation(threshold: float) -> Transform:
         delta = jnp.abs(new - old)
         frozen_new = frozen | ((delta > 0) & (delta < cut))
         return jnp.where(frozen, old, new), frozen_new
+
+    return transform
+
+
+def row_freeze(threshold: float, axes: tuple[int, ...] = (-1,)) -> Transform:
+    """Per-row convergence freeze for **batched** solves (the PPR subsystem).
+
+    A row whose observed delta (max over ``axes`` — the non-batch axes of the
+    rank layout) is at or below ``threshold`` is frozen: it holds its
+    converged value while other rows keep iterating, which is both the
+    per-slot early exit of the serving engine and what keeps warm-started
+    rows from drifting.  Unlike :func:`perforation` this is exact, not lossy:
+    a converged row of a contraction stays converged, freezing merely sheds
+    its work.
+    """
+
+    def transform(old, new, frozen):
+        new = jnp.where(frozen, old, new)
+        row_err = jnp.max(jnp.abs(new - old), axis=axes, keepdims=True)
+        frozen_new = frozen | jnp.broadcast_to(row_err <= threshold, frozen.shape)
+        return new, frozen_new
 
     return transform
 
@@ -110,6 +143,41 @@ def barrier_schedule(sweep: Callable[..., jax.Array],
     return step
 
 
+def batched_barrier_schedule(
+    sweep: Callable[..., jax.Array],
+    transforms: Sequence[Transform] = (),
+    *,
+    pass_frozen: bool = False,
+    row_error: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+) -> Callable:
+    """Jacobi over a **batch** of ``b`` independent solves sharing one graph.
+
+    The rank state is any layout with a batch axis — ``(b, n)`` for the
+    vertex-centric sweeps, ``(n_blocks, b, block)`` for the blocked Pallas
+    layout — and each batch row is one schedule unit: ``perr`` has shape
+    ``(b,)`` (pass ``n_units=b`` to :func:`solve`), so the stop rule fires
+    only when *every* row has converged, while a :func:`row_freeze` transform
+    exits individual rows early.
+
+    ``row_error(new, old) -> (b,)`` reduces the non-batch axes; the default
+    assumes the batch is axis 0 and reduces everything after it.  ``pass_
+    frozen`` is as in :func:`barrier_schedule` (the batched Pallas sweep
+    takes the freeze mask as a kernel operand).
+    """
+
+    def step(state: EngineState) -> EngineState:
+        new = sweep(state.pr, state.frozen) if pass_frozen else sweep(state.pr)
+        new, frozen = _apply_transforms(transforms, state.pr, new, state.frozen)
+        if row_error is not None:
+            err = row_error(new, state.pr)
+        else:
+            err = jnp.max(jnp.abs(new - state.pr),
+                          axis=tuple(range(1, new.ndim)))
+        return EngineState(new, frozen, err, state.it + 1)
+
+    return step
+
+
 def nosync_schedule(
     sweep: Callable[..., jax.Array],
     *,
@@ -123,7 +191,11 @@ def nosync_schedule(
     """No-Sync (paper Alg 3): partitions are swept **in order within an
     iteration**, each reading the freshest ranks (single ``pr`` array, no
     prev/new swap).  ``sweep(i, pr)`` returns partition ``i``'s proposed
-    ``(vp,)`` block from the current full vector.
+    ``(vp,)`` block from the current full vector.  Partitions live on the
+    **last** axis of ``pr``, so the same schedule drives both the global
+    ``(n_pad,)`` layout and the batched PPR ``(b, n_pad)`` layout (every row
+    of a batch shares the partition sweep order; per-unit error reduces over
+    the batch too).
 
     ``prologue(pr)``, when given, computes once-per-iteration context shared
     by every partition sweep — e.g. the dangling-mass snapshot, which would
@@ -147,13 +219,15 @@ def nosync_schedule(
         def sweep_partition(i, carry):
             def do(carry):
                 pr, frozen, perr = carry
-                old = jax.lax.dynamic_slice_in_dim(pr, i * vp, vp)
+                ax = pr.ndim - 1  # partitions live on the last axis
+                old = jax.lax.dynamic_slice_in_dim(pr, i * vp, vp, axis=ax)
                 new = sweep(i, pr) if prologue is None else sweep(i, pr, ctx)
                 if transforms:  # frozen is a zero-size stub otherwise
-                    fr = jax.lax.dynamic_slice_in_dim(frozen, i * vp, vp)
+                    fr = jax.lax.dynamic_slice_in_dim(frozen, i * vp, vp, axis=ax)
                     new, fr = _apply_transforms(transforms, old, new, fr)
-                    frozen = jax.lax.dynamic_update_slice_in_dim(frozen, fr, i * vp, 0)
-                pr = jax.lax.dynamic_update_slice_in_dim(pr, new, i * vp, 0)
+                    frozen = jax.lax.dynamic_update_slice_in_dim(
+                        frozen, fr, i * vp, ax)
+                pr = jax.lax.dynamic_update_slice_in_dim(pr, new, i * vp, ax)
                 perr = perr.at[i].set(jnp.max(jnp.abs(new - old)))
                 return pr, frozen, perr
 
@@ -190,11 +264,25 @@ def solve(
 
     ``track_frozen`` allocates the perforation freeze mask; leave it off for
     transform-free variants so the while-loop carry holds a zero-size stub
-    instead of a full-size boolean array."""
+    instead of a full-size boolean array.
+
+    The engine also records the **residual trajectory**: the max observed
+    unit error after each iteration, in an ``inf``-padded ``(max_iter,)``
+    buffer returned as ``PageRankResult.residuals`` (``inf`` marks rounds
+    that never ran; callers slice with ``[:iterations]``).  One f32 scatter
+    per iteration — the benchmarks turn this into convergence curves instead
+    of endpoint-only records."""
     dtype = pr0.dtype
 
-    def cond(state: EngineState):
+    def cond(carry):
+        state, _ = carry
         return (jnp.max(state.perr) > threshold) & (state.it < max_iter)
+
+    def body(carry):
+        state, errs = carry
+        new = step(state)
+        # state.it is the 0-based index of the iteration `new` just finished
+        return new, errs.at[state.it].set(jnp.max(new.perr).astype(jnp.float32))
 
     init = EngineState(
         pr=pr0,
@@ -202,8 +290,9 @@ def solve(
         perr=jnp.full((n_units,), jnp.inf, dtype),
         it=jnp.asarray(0, jnp.int32),
     )
-    final = jax.lax.while_loop(cond, step, init)
-    return PageRankResult(final.pr, final.it, jnp.max(final.perr))
+    errs0 = jnp.full((max_iter,), jnp.inf, jnp.float32)
+    final, errs = jax.lax.while_loop(cond, body, (init, errs0))
+    return PageRankResult(final.pr, final.it, jnp.max(final.perr), errs)
 
 
 # ---------------------------------------------------------------------------
@@ -303,6 +392,8 @@ def _ensure_registered() -> None:
     import repro.core.distributed  # noqa: F401
     import repro.core.pagerank  # noqa: F401
     import repro.kernels.spmv.ops  # noqa: F401
+    import repro.ppr.batched  # noqa: F401
+    import repro.ppr.push  # noqa: F401
 
 
 def list_variants() -> tuple[str, ...]:
@@ -417,15 +508,15 @@ def plan_run(
     between the core solve and the pruned region.
     """
     if b.bundle is None:  # fully-pruned graph: reconstruction does it all
-        it, err = np.asarray(0, np.int32), np.asarray(0.0)
+        it, err, residuals = np.asarray(0, np.int32), np.asarray(0.0), None
         core_pr = np.zeros(0, dtype=np.float64)
     else:
         r = b.inner.run(b.bundle, d=d, threshold=threshold, max_iter=max_iter,
                         handle_dangling=False, **opts)
-        it, err = r.iterations, r.err
+        it, err, residuals = r.iterations, r.err, r.residuals
         core_pr = np.asarray(r.pr, dtype=np.float64)
     pr = b.plan.reconstruct(core_pr, d=d, handle_dangling=handle_dangling)
-    return PageRankResult(pr, it, err)
+    return PageRankResult(pr, it, err, residuals)
 
 
 def plan_stats(bundle) -> dict | None:

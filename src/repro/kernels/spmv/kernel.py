@@ -216,3 +216,133 @@ def spmv_gs_pass(
     )(tile_src_block, tile_dst_block, params, pr_blocks, inv_out_blocks,
       vmask_blocks, frozen_blocks, tiles_src_local, tiles_dst_local,
       tiles_valid)
+
+
+# ---------------------------------------------------------------------------
+# Multi-vector (batched PPR) Gauss–Seidel sweep
+# ---------------------------------------------------------------------------
+#
+# The PPR subsystem solves b personalized rank vectors against ONE graph; the
+# tile structure (and thus the HBM edge traffic) is identical for every row,
+# so the batched pass amortizes the index streams across the whole batch: the
+# same one-hot tile matmuls now contract a (block, b) panel instead of a
+# (block,) vector — still MXU work, b× the useful FLOPs per byte of edge data.
+#
+# Layout: the rank state is (n_blocks, b, block) — block-major so each dst
+# block's (b, block) panel is one contiguous VMEM slice, batch on the sublane
+# axis (compiled TPU prefers b a multiple of 8; interpret mode doesn't care).
+# As in spmv_gs_pass the state lives in the output ref under a constant index
+# map and is revisited across the whole grid: step 0 copies the input ranks
+# in, each dst-block run accumulates tile panels into a (b, block) VMEM
+# scratch, and the commit applies the per-row PPR update
+#
+#     new[row] = (base[row] + d·acc[row]) · vmask
+#
+# where base = teleport_blocks·((1-d) + d·dangling_mass[row]) is precomputed
+# per pass (the per-row teleport matrix generalizes the scalar (1-d)/n of the
+# global kernel).  ``frozen_rows`` is the batched form of the freeze mask:
+# whole rows (converged serving slots) hold their ranks through the pass —
+# per-slot early exit for the continuous-batching PPR engine.
+
+
+def _spmv_gs_multi_kernel(sb_ref, db_ref, params_ref, pr0_ref, inv_ref,
+                          vmask_ref, frozen_ref, base_ref, src_ref, dst_ref,
+                          val_ref, pr_ref, acc_ref):
+    t = pl.program_id(0)
+    num_t = pl.num_programs(0)
+    db = db_ref[t]
+    sb = sb_ref[t]
+    prev = jnp.maximum(t - 1, 0)
+    nxt = jnp.minimum(t + 1, num_t - 1)
+    is_run_start = (t == 0) | (db_ref[prev] != db)
+    is_run_end = (t == num_t - 1) | (db_ref[nxt] != db)
+
+    @pl.when(t == 0)
+    def _load_state():
+        pr_ref[...] = pr0_ref[...]
+
+    @pl.when(is_run_start)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Fresh gather of the whole batch panel: (b, block) ranks of src block sb.
+    pr_sb = pl.load(pr_ref, (pl.ds(sb, 1), slice(None), slice(None)))[0]
+    inv_sb = pl.load(inv_ref, (pl.ds(sb, 1), slice(None)))[0]
+    contrib = pr_sb * inv_sb[None, :]  # (b, block)
+    block = contrib.shape[-1]
+    ids = jax.lax.broadcasted_iota(jnp.int32, (src_ref.shape[-1], block), 1)
+    onehot_src = (src_ref[0, :][:, None] == ids).astype(jnp.float32)
+    gathered = jnp.dot(onehot_src, contrib.T,
+                       preferred_element_type=jnp.float32)  # (cap, b)
+    vals = gathered * val_ref[0, :][:, None]
+    onehot_dst = (dst_ref[0, :][:, None] == ids).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(vals.T, onehot_dst,
+                            preferred_element_type=jnp.float32)  # (b, block)
+
+    @pl.when(is_run_end)
+    def _commit_block():
+        d = params_ref[0, 0]
+        vm = pl.load(vmask_ref, (pl.ds(db, 1), slice(None)))[0]  # (block,)
+        fz = frozen_ref[0, :]  # (b,) — 1 for rows held through the pass
+        base = pl.load(base_ref, (pl.ds(db, 1), slice(None), slice(None)))[0]
+        old = pl.load(pr_ref, (pl.ds(db, 1), slice(None), slice(None)))[0]
+        new = (base + d * acc_ref[...]) * vm[None, :]
+        new = fz[:, None] * old + (1.0 - fz[:, None]) * new
+        pl.store(pr_ref, (pl.ds(db, 1), slice(None), slice(None)),
+                 new[None].astype(pr_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def spmv_gs_pass_multi(
+    pr_blocks: jax.Array,  # (n_blocks, b, block) f32 — current rank rows
+    inv_out_blocks: jax.Array,  # (n_blocks, block) f32 — 1/outdeg, padded
+    vmask_blocks: jax.Array,  # (n_blocks, block) f32 — 1 for real vertices
+    frozen_rows: jax.Array,  # (1, b) f32 — 1 for rows held through the pass
+    base_blocks: jax.Array,  # (n_blocks, b, block) f32 — per-row teleport base
+    params: jax.Array,  # (1, 1) f32 — [d]
+    tiles_src_local: jax.Array,  # (T, cap) int32
+    tiles_dst_local: jax.Array,  # (T, cap) int32
+    tiles_valid: jax.Array,  # (T, cap) f32
+    tile_src_block: jax.Array,  # (T,) int32 — tiles sorted by dst_block
+    tile_dst_block: jax.Array,  # (T,) int32 — non-decreasing
+    *,
+    block: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """One blocked Gauss–Seidel pass over ``b`` rank rows; returns the
+    updated ``(n_blocks, b, block)`` state.
+
+    ``base_blocks`` is the per-row additive term in the same layout as the
+    rank state — ``teleport·((1-d) + d·dangling_mass_row)`` for PPR, which
+    reduces to the global kernel's scalar base when every row's teleport is
+    uniform.  ``frozen_rows`` freezes whole rows (serving slots), not single
+    vertices; with ``b=1``, all-zeros mask and a uniform base this pass is
+    exactly :func:`spmv_gs_pass` on one vector."""
+    n_blocks, b, _ = pr_blocks.shape
+    T, cap = tiles_src_local.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((n_blocks, b, block), lambda t, sb, db: (0, 0, 0)),
+            pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((1, b), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((n_blocks, b, block), lambda t, sb, db: (0, 0, 0)),
+            pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
+            pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
+            pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_blocks, b, block), lambda t, sb, db: (0, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((b, block), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _spmv_gs_multi_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks, b, block), pr_blocks.dtype),
+        interpret=interpret,
+    )(tile_src_block, tile_dst_block, params, pr_blocks, inv_out_blocks,
+      vmask_blocks, frozen_rows, base_blocks, tiles_src_local,
+      tiles_dst_local, tiles_valid)

@@ -132,7 +132,7 @@ def _pallas_impl(
     pr0 = jnp.full((n_blocks, block), 1.0 / n, jnp.float32) * vmask
     r = solve(step, pr0, threshold=threshold, max_iter=max_iter,
               track_frozen=perforate)
-    return PageRankResult(r.pr.reshape(-1)[:n], r.iterations, r.err)
+    return PageRankResult(r.pr.reshape(-1)[:n], r.iterations, r.err, r.residuals)
 
 
 def pagerank_pallas(

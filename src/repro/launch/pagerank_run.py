@@ -4,12 +4,23 @@
         --variant nosync --threads 56 [--scale-down 256] [--ckpt /tmp/pr]
 
 Variants come from the registry (``repro.core.solver``); ``--list`` prints
-them with descriptions.  The Pallas variants run the kernel in interpret mode
-off-TPU automatically.
+them with their ``layout``/``backend``/``schedule`` metadata columns.  The
+Pallas variants run the kernel in interpret mode off-TPU automatically.
+
+Two subcommands expose the personalized-PageRank subsystem:
+
+    # one-shot PPR query (push solver by default)
+    ... -m repro.launch.pagerank_run query --dataset webStanford \
+        --seeds 7,42 --top-k 10
+
+    # continuous-batching PPR serving demo over random seed queries
+    ... -m repro.launch.pagerank_run serve --dataset webStanford \
+        --slots 8 --queries 32
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
@@ -22,7 +33,98 @@ from repro.graphs import DATASETS, make_dataset
 from repro.utils.jaxcompat import on_tpu
 
 
+def _parse_seeds(spec: str) -> tuple[int, ...]:
+    """``"7,42"`` → ``(7, 42)``; empty string → uniform (global) teleport."""
+    return tuple(int(s) for s in spec.split(",") if s.strip() != "")
+
+
+def query_main(argv) -> int:
+    ap = argparse.ArgumentParser(prog="pagerank_run query")
+    ap.add_argument("--dataset", choices=tuple(DATASETS), default="webStanford")
+    ap.add_argument("--scale-down", type=float, default=256.0)
+    ap.add_argument("--seeds", default="", help="comma-separated seed vertices"
+                    " (empty = uniform teleport, i.e. global PageRank)")
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--solver", choices=("push", "batched"), default="push")
+    ap.add_argument("--threshold", type=float, default=1e-8,
+                    help="push residual bound rmax / engine threshold")
+    ap.add_argument("--handle-dangling", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.ppr import ppr_push, teleport_from_seeds, topk
+    from repro.ppr.batched import ppr_barrier
+    from repro.core.pagerank import DeviceGraph
+
+    g = make_dataset(args.dataset, scale_down=args.scale_down)
+    seeds = _parse_seeds(args.seeds)
+    print(f"{args.dataset}: n={g.n} m={g.m}  seeds={list(seeds) or 'uniform'}")
+    t0 = time.time()
+    if args.solver == "push":
+        res = ppr_push(g, seeds, rmax=args.threshold,
+                       handle_dangling=args.handle_dangling)
+        idx, vals = res.topk(args.top_k)
+        extra = (f"rounds={res.rounds} pushes={res.pushes} "
+                 f"l1_bound={res.l1_bound:.2e}")
+    else:
+        r = ppr_barrier(DeviceGraph.from_graph(g),
+                        teleport_from_seeds([seeds], g.n),
+                        threshold=args.threshold,
+                        handle_dangling=args.handle_dangling)
+        idx, vals = topk(np.asarray(r.pr, np.float64)[0], args.top_k)
+        extra = f"iterations={int(r.iterations)} err={float(r.err):.2e}"
+    wall = time.time() - t0
+    print(f"solver={args.solver}: {extra} wall={wall:.3f}s")
+    for rank, (v, x) in enumerate(zip(idx, vals), 1):
+        print(f"  #{rank:<3d} vertex {int(v):<8d} ppr={float(x):.6e}")
+    return 0
+
+
+def serve_main(argv) -> int:
+    ap = argparse.ArgumentParser(prog="pagerank_run serve")
+    ap.add_argument("--dataset", choices=tuple(DATASETS), default="webStanford")
+    ap.add_argument("--scale-down", type=float, default=256.0)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--threshold", type=float, default=1e-6)
+    ap.add_argument("--backend", choices=("jax", "pallas"), default="jax")
+    ap.add_argument("--handle-dangling", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.queries < 1:
+        ap.error("--queries must be >= 1")
+
+    from repro.serving.ppr_engine import PPREngine, make_query_stream
+
+    g = make_dataset(args.dataset, scale_down=args.scale_down)
+    print(f"{args.dataset}: n={g.n} m={g.m}  slots={args.slots} "
+          f"backend={args.backend}")
+    eng = PPREngine(g, slots=args.slots, threshold=args.threshold,
+                    backend=args.backend,
+                    handle_dangling=args.handle_dangling)
+    queries = make_query_stream(g.n, args.queries, top_k=args.top_k,
+                                seed=args.seed)
+    t0 = time.time()
+    responses = eng.drain(queries)
+    wall = time.time() - t0
+    lat = np.asarray([r.latency_s for r in responses]) * 1e3
+    print(f"served {len(responses)} queries in {wall:.2f}s "
+          f"({len(responses) / wall:.1f} q/s)  "
+          f"p50={np.percentile(lat, 50):.1f}ms "
+          f"p99={np.percentile(lat, 99):.1f}ms  warm_hits={eng.warm_hits}")
+    first = min(responses, key=lambda r: r.qid)
+    top = ", ".join(f"{int(v)}:{float(x):.2e}"
+                    for v, x in zip(first.indices[:5], first.values[:5]))
+    print(f"sample qid={first.qid} seeds={list(first.seeds)} top5: {top}")
+    return 0
+
+
 def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "query":
+        return query_main(argv[1:])
+    if argv and argv[0] == "serve":
+        return serve_main(argv[1:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", choices=tuple(DATASETS), default="webStanford")
     ap.add_argument("--scale-down", type=float, default=256.0)
@@ -42,9 +144,15 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.list:
+        # print the full metadata triple the registry carries — the drivers
+        # dispatch on it, so the operator should see it too
+        header = f"{'variant':20s} {'layout':18s} {'backend':10s} {'schedule':10s} description"
+        print(header)
+        print("-" * len(header))
         for name in list_variants():
             v = get_variant(name)
-            print(f"{name:20s} [{v.backend}/{v.schedule}] {v.description}")
+            print(f"{name:20s} {v.layout:18s} {v.backend:10s} {v.schedule:10s} "
+                  f"{v.description}")
         return 0
 
     g = make_dataset(args.dataset, scale_down=args.scale_down)
@@ -70,6 +178,12 @@ def main(argv=None) -> int:
     r = v.run(bundle, threshold=args.threshold,
               handle_dangling=args.handle_dangling, **opts)
     pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)
+    if pr.ndim == 2:
+        # ppr_* variants return a (b, n) batch; this driver passes no seeds,
+        # so b == 1 and the single row is the uniform-teleport (global)
+        # solve — flatten it for the L1/top-5/checkpoint paths below
+        assert pr.shape[0] == 1, pr.shape
+        pr = pr[0]
     wall = time.time() - t0
 
     print(f"variant={args.variant}: iterations={iters} err={err:.2e} wall={wall:.2f}s")

@@ -1,0 +1,36 @@
+"""Personalized PageRank (PPR) subsystem.
+
+Three pillars on top of the global-PageRank engine:
+
+* :mod:`repro.ppr.batched` — batched multi-seed solves: the convergence
+  engine generalized from rank shape ``(n,)`` to ``(b, n)`` with a per-row
+  teleport matrix and per-row convergence/freeze masks (``ppr_barrier``,
+  ``ppr_nosync``, ``ppr_pallas`` registry entries + the float64 oracle
+  :func:`ppr_numpy`).
+* :mod:`repro.ppr.push` — residual/estimate forward push: the low-latency
+  single-seed local solver (``ppr_push`` registry entry) with sparse top-k
+  answers and an a-priori L1 error bound.
+* :mod:`repro.serving.ppr_engine` — the continuous-batching PPR query engine
+  serving seed queries from a fixed device-resident batch.
+"""
+from repro.ppr.batched import (
+    normalize_seeds,
+    ppr_barrier,
+    ppr_nosync,
+    ppr_numpy,
+    ppr_pallas,
+    teleport_from_seeds,
+)
+from repro.ppr.push import PushResult, ppr_push, topk
+
+__all__ = [
+    "normalize_seeds",
+    "teleport_from_seeds",
+    "ppr_numpy",
+    "ppr_barrier",
+    "ppr_nosync",
+    "ppr_pallas",
+    "ppr_push",
+    "PushResult",
+    "topk",
+]

@@ -1,0 +1,322 @@
+"""Continuous-batching PPR query engine.
+
+The PPR analogue of :mod:`repro.serving.engine`'s slot-recycling idiom: a
+host-side scheduler owns a fixed ``(B, n)`` device-resident batch of rank
+rows (``B`` = ``slots``), and a jitted multi-sweep step advances every
+active slot at once:
+
+* **submit** — a seed query is allocated a free slot: its teleport row is
+  written into the batch's teleport matrix and its rank row is initialized
+  from the **warm cache** (the converged vector of an identical earlier
+  query) or, cold, from the teleport row itself.
+* **step** — one jitted call runs ``iters_per_step`` batched sweeps; frozen
+  rows (free slots and already-converged ones) are held in place, which is
+  the engine-level form of the batched solver's :func:`row_freeze` per-row
+  early exit.  Per-row errors come back with the state, so the scheduler
+  sees convergence without an extra device round-trip.
+* **harvest** — a converged slot's row is pulled to host once, top-k
+  extracted (ties broken by vertex id), the vector cached, and the slot
+  recycled for the next queued query.
+
+Two compute backends share the scheduler: ``"jax"`` drives the batched
+vertex-centric sweep (:func:`repro.ppr.batched.make_batched_sweep`),
+``"pallas"`` the multi-vector blocked Gauss–Seidel kernel
+(:func:`repro.kernels.spmv.spmv_gs_pass_multi`) with the rank batch living
+in VMEM across each pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pagerank import DeviceGraph
+from repro.core.solver import DEFAULT_DAMPING
+from repro.graphs.csr import Graph
+from repro.kernels.spmv.ops import PallasGraph
+from repro.ppr.batched import (
+    blocked_rows,
+    make_batched_pallas_sweep,
+    make_batched_sweep,
+    teleport_from_seeds,
+)
+from repro.ppr.push import topk
+from repro.utils.jaxcompat import on_tpu
+
+__all__ = ["PPRQuery", "PPRResponse", "PPREngine", "make_query_stream"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PPRQuery:
+    qid: int
+    seeds: tuple[int, ...] = ()  # empty = uniform teleport (global query)
+    top_k: int = 10
+
+
+@dataclasses.dataclass
+class PPRResponse:
+    qid: int
+    seeds: tuple[int, ...]
+    indices: np.ndarray  # (top_k,) vertex ids, rank-descending
+    values: np.ndarray  # (top_k,) PPR estimates
+    iterations: int  # sweeps charged to this slot (iters_per_step granular)
+    latency_s: float  # submit → harvest wall time
+    warm_start: bool  # row was seeded from the cache
+
+
+def make_query_stream(n: int, count: int, *, top_k: int = 10,
+                      repeat_fraction: float = 0.25,
+                      seed: int = 0) -> list[PPRQuery]:
+    """Synthetic mixed PPR traffic — THE query stream for the serving demo
+    and the serving benchmark (one generator, so they exercise the same
+    mix): ~60% single-seed, ~25% multi-seed (2–4 seeds), ~15% uniform/global
+    rows, with ``repeat_fraction`` of queries re-asking an earlier seed set
+    (warm-cache traffic)."""
+    rng = np.random.default_rng(seed)
+    queries: list[PPRQuery] = []
+    for i in range(count):
+        if queries and rng.random() < repeat_fraction:
+            seeds = queries[int(rng.integers(0, len(queries)))].seeds
+        else:
+            kind = rng.random()
+            if kind < 0.60 or n < 2:  # tiny graphs can't host multi-seed
+                seeds = (int(rng.integers(0, n)),)
+            elif kind < 0.85:
+                hi = min(4, n)  # seed-set size capped by the vertex count
+                seeds = tuple(int(s) for s in
+                              rng.choice(n, size=int(rng.integers(2, hi + 1)),
+                                         replace=False))
+            else:
+                seeds = ()
+        queries.append(PPRQuery(qid=i, seeds=seeds, top_k=top_k))
+    return queries
+
+
+@dataclasses.dataclass
+class _Active:
+    query: PPRQuery
+    t0: float
+    iters: int = 0
+    warm: bool = False
+
+
+class _JaxBackend:
+    """(B, n) rank batch advanced by the batched vertex-centric sweep."""
+
+    def __init__(self, g: Graph, *, slots: int, d: float,
+                 handle_dangling: bool, iters_per_step: int, **_):
+        dg = DeviceGraph.from_graph(g)
+        self.n = g.n
+        sweep = make_batched_sweep(dg.src, dg.dst, dg.inv_out, dg.dangling,
+                                   n=g.n, d=d, handle_dangling=handle_dangling)
+        self.state = jnp.zeros((slots, g.n), jnp.float32)
+        self.tele = jnp.zeros((slots, g.n), jnp.float32)
+
+        def multi_step(pr, tele, frozen):
+            def body(_, carry):
+                pr, _ = carry
+                new = jnp.where(frozen[:, None], pr, sweep(pr, tele))
+                return new, jnp.max(jnp.abs(new - pr), axis=1)
+            return jax.lax.fori_loop(
+                0, iters_per_step, body,
+                (pr, jnp.full((pr.shape[0],), jnp.inf, jnp.float32)))
+
+        self._multi_step = jax.jit(multi_step)
+
+    def set_row(self, slot: int, row: np.ndarray, trow: np.ndarray) -> None:
+        self.state = self.state.at[slot].set(jnp.asarray(row, jnp.float32))
+        self.tele = self.tele.at[slot].set(jnp.asarray(trow, jnp.float32))
+
+    def get_row(self, slot: int) -> np.ndarray:
+        return np.asarray(self.state[slot], dtype=np.float64)
+
+    def step(self, frozen: np.ndarray) -> np.ndarray:
+        self.state, err = self._multi_step(self.state, self.tele,
+                                           jnp.asarray(frozen))
+        return np.asarray(err)
+
+
+class _PallasBackend:
+    """(n_blocks, B, block) rank batch advanced by the multi-vector GS pass."""
+
+    def __init__(self, g: Graph, *, slots: int, d: float,
+                 handle_dangling: bool, iters_per_step: int,
+                 block: int = 256, tile_cap: int = 1024,
+                 interpret: Optional[bool] = None):
+        pg = PallasGraph.build(g, block=block, tile_cap=tile_cap)
+        self.n = g.n
+        self.pg = pg
+        interpret = (not on_tpu()) if interpret is None else interpret
+        self.state = jnp.zeros((pg.n_blocks, slots, pg.block), jnp.float32)
+        self.tele = jnp.zeros((pg.n_blocks, slots, pg.block), jnp.float32)
+        sweep = make_batched_pallas_sweep(
+            pg.tiles_src_local, pg.tiles_dst_local, pg.tiles_valid,
+            pg.tile_src_block, pg.tile_dst_block, pg.inv_out_blocks,
+            pg.dangling_blocks, n=g.n, block=pg.block, d=d,
+            handle_dangling=handle_dangling, interpret=interpret)
+
+        def multi_step(pr, tele, frozen):
+            fz = frozen.astype(jnp.float32).reshape(1, -1)
+
+            def body(_, carry):
+                pr, _ = carry
+                new = sweep(pr, tele, fz)
+                return new, jnp.max(jnp.abs(new - pr), axis=(0, 2))
+            return jax.lax.fori_loop(
+                0, iters_per_step, body,
+                (pr, jnp.full((pr.shape[1],), jnp.inf, jnp.float32)))
+
+        self._multi_step = jax.jit(multi_step)
+
+    def set_row(self, slot: int, row: np.ndarray, trow: np.ndarray) -> None:
+        rb = jnp.asarray(blocked_rows(row[None], self.pg.n_blocks,
+                                      self.pg.block)[:, 0, :])
+        tb = jnp.asarray(blocked_rows(trow[None], self.pg.n_blocks,
+                                      self.pg.block)[:, 0, :])
+        self.state = self.state.at[:, slot, :].set(rb)
+        self.tele = self.tele.at[:, slot, :].set(tb)
+
+    def get_row(self, slot: int) -> np.ndarray:
+        return np.asarray(self.state[:, slot, :],
+                          dtype=np.float64).reshape(-1)[:self.n]
+
+    def step(self, frozen: np.ndarray) -> np.ndarray:
+        self.state, err = self._multi_step(self.state, self.tele,
+                                           jnp.asarray(frozen))
+        return np.asarray(err)
+
+
+_BACKENDS = {"jax": _JaxBackend, "pallas": _PallasBackend}
+
+
+class PPREngine:
+    """Continuous-batching PPR serving over ``slots`` fixed batch rows."""
+
+    def __init__(self, g: Graph, *, slots: int = 8, d: float = DEFAULT_DAMPING,
+                 threshold: float = 1e-7, handle_dangling: bool = False,
+                 backend: str = "jax", iters_per_step: int = 8,
+                 cache_size: int = 256, **backend_opts):
+        if backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {sorted(_BACKENDS)}, "
+                             f"got {backend!r}")
+        if g.n == 0:
+            raise ValueError("cannot serve PPR over an empty graph")
+        self.g = g
+        self.slots = slots
+        self.threshold = threshold
+        self.iters_per_step = iters_per_step
+        self.backend_name = backend
+        self._backend = _BACKENDS[backend](
+            g, slots=slots, d=d, handle_dangling=handle_dangling,
+            iters_per_step=iters_per_step, **backend_opts)
+        self._active: list[Optional[_Active]] = [None] * slots
+        # free slots stay frozen: their rows are held in place by the sweep
+        self._frozen = np.ones(slots, dtype=bool)
+        self._cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._cache_size = cache_size
+        self.warm_hits = 0
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _cache_key(self, q: PPRQuery) -> tuple:
+        return tuple(sorted(set(int(s) for s in q.seeds)))
+
+    def validate(self, q: PPRQuery) -> None:
+        """Raise for a malformed query — called BEFORE any engine state is
+        touched, so a bad query can never leak a half-allocated slot."""
+        for s in q.seeds:
+            if not 0 <= int(s) < self.g.n:
+                raise ValueError(
+                    f"query {q.qid}: seed vertex {int(s)} out of range "
+                    f"[0, {self.g.n})")
+
+    def submit(self, q: PPRQuery) -> bool:
+        """Admit ``q`` into a free slot; False when the batch is full.
+        Raises on malformed seeds without mutating engine state."""
+        self.validate(q)
+        try:
+            slot = self._active.index(None)
+        except ValueError:
+            return False
+        trow = teleport_from_seeds([tuple(q.seeds)], self.g.n)[0]
+        cached = self._cache.get(self._cache_key(q))
+        warm = cached is not None
+        if warm:
+            self._cache.move_to_end(self._cache_key(q))
+            self.warm_hits += 1
+        row = cached if warm else trow
+        self._backend.set_row(slot, np.asarray(row, np.float64), trow)
+        self._active[slot] = _Active(query=q, t0=time.perf_counter(), warm=warm)
+        self._frozen[slot] = False
+        return True
+
+    def step(self) -> list[PPRResponse]:
+        """Advance every active slot ``iters_per_step`` sweeps; harvest and
+        recycle the slots that converged."""
+        if all(a is None for a in self._active):
+            return []
+        err = self._backend.step(self._frozen)
+        out: list[PPRResponse] = []
+        for slot, act in enumerate(self._active):
+            if act is None:
+                continue
+            act.iters += self.iters_per_step
+            if err[slot] <= self.threshold:
+                row = self._backend.get_row(slot)
+                idx, vals = topk(row, act.query.top_k)
+                key = self._cache_key(act.query)
+                self._cache[key] = row
+                self._cache.move_to_end(key)
+                while len(self._cache) > self._cache_size:
+                    self._cache.popitem(last=False)
+                out.append(PPRResponse(
+                    qid=act.query.qid, seeds=tuple(act.query.seeds),
+                    indices=idx, values=vals, iterations=act.iters,
+                    latency_s=time.perf_counter() - act.t0,
+                    warm_start=act.warm))
+                self._active[slot] = None
+                self._frozen[slot] = True
+        return out
+
+    @property
+    def active_count(self) -> int:
+        return sum(a is not None for a in self._active)
+
+    def reset(self) -> None:
+        """Forget the warm cache and counters (engine must be idle) — lets a
+        benchmark reuse one engine (and its already-traced jitted step) for a
+        cold measured run; re-jitting a fresh engine would put compile time
+        inside the timed region."""
+        if self.active_count:
+            raise RuntimeError("cannot reset a PPREngine with active slots")
+        self._cache.clear()
+        self.warm_hits = 0
+
+    def drain(self, queries, max_steps: int = 100_000) -> list[PPRResponse]:
+        """Feed ``queries`` through the engine (admitting as slots free up)
+        and run until every response is harvested.
+
+        The whole batch is validated up front: one malformed query raises
+        BEFORE any work starts, instead of aborting mid-drain and discarding
+        the responses already harvested."""
+        queries = list(queries)
+        for q in queries:
+            self.validate(q)
+        pending = deque(queries)
+        out: list[PPRResponse] = []
+        steps = 0
+        while pending or self.active_count:
+            while pending and self.submit(pending[0]):
+                pending.popleft()
+            out += self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(
+                    f"PPREngine.drain did not converge within {max_steps} "
+                    f"steps (threshold={self.threshold})")
+        return out

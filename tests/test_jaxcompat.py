@@ -1,0 +1,72 @@
+"""Version-gated audit of the ``repro.utils.jaxcompat`` shims (ROADMAP item:
+drop the shim once the container pins modern jax).
+
+Two invariants, so the shim can be deleted *confidently* rather than
+hopefully:
+
+* every compat branch must match what the installed jax actually exposes —
+  a shim silently taking the legacy path on a modern jax is exactly the rot
+  this test exists to catch;
+* the moment ALL branches take the modern path, the suite flags the module
+  as removable (a loud ``UserWarning`` summarised at the end of the pytest
+  run) — the signal a later PR deletes the shim on.
+"""
+import warnings
+
+import jax
+import pytest
+
+from repro.utils import jaxcompat
+
+
+def _has_toplevel_shard_map() -> bool:
+    return hasattr(jax, "shard_map")
+
+
+def _has_axis_type() -> bool:
+    try:
+        from jax.sharding import AxisType  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+def test_shard_map_kwarg_branch_matches_installed_jax():
+    """jax >= 0.6 exports ``jax.shard_map`` with ``check_vma``; 0.4.x has
+    the experimental module with ``check_rep``.  The shim must have picked
+    the branch the installed jax actually implements."""
+    if _has_toplevel_shard_map():
+        assert jaxcompat._SHARD_MAP_CHECK_KW == "check_vma"
+    else:
+        assert jaxcompat._SHARD_MAP_CHECK_KW == "check_rep"
+
+
+def test_axis_type_branch_matches_installed_jax():
+    assert jaxcompat._HAS_AXIS_TYPE == _has_axis_type()
+
+
+def test_make_mesh_shim_builds_on_this_jax():
+    """The shims must actually work on whichever side of the gate we are."""
+    mesh = jaxcompat.make_mesh((1,), ("data",))
+    assert mesh.shape["data"] == 1
+    amesh = jaxcompat.abstract_mesh((2,), ("data",))
+    assert amesh.shape["data"] == 2
+
+
+def test_jaxcompat_flags_itself_removable_on_modern_jax():
+    """The gate: on jax >= 0.6 (top-level shard_map AND AxisType present)
+    every shim is a pass-through, so flag the module as deletable.  On the
+    pinned 0.4.x container this skips — the shims are still load-bearing."""
+    modern = _has_toplevel_shard_map() and _has_axis_type()
+    if not modern:
+        pytest.skip(
+            f"jax {jax.__version__}: legacy branches still in use — "
+            "repro/utils/jaxcompat.py must stay")
+    warnings.warn(
+        "repro/utils/jaxcompat.py is now removable: jax "
+        f"{jax.__version__} exposes jax.shard_map(check_vma=...) and "
+        "jax.sharding.AxisType natively.  Inline the modern calls at the "
+        "call sites and delete the shim (ROADMAP: 'jax version skew').",
+        UserWarning,
+        stacklevel=1,
+    )
