@@ -105,8 +105,9 @@ def bench_records(name: str, scale_down: float = SCALE_DOWN) -> list[dict]:
             )
             sim_seq = simulate_jittered(pg, "sequential", iterations=it_b,
                                         seed=1, rel_costs=rel_costs)
-        # record the core-graph size so the JSON shows the preprocessing
-        # payoff, not just wall time
+        # record the core-graph size (and the chain-contraction edge
+        # counters) so the JSON shows the preprocessing payoff, not just
+        # wall time
         records.append({
             "dataset": name,
             "variant": vname,
@@ -117,6 +118,8 @@ def bench_records(name: str, scale_down: float = SCALE_DOWN) -> list[dict]:
             "interpreted": bool(v.backend == "pallas" and INTERPRET),
             "core_n": ps["core_n"] if ps else g.n,
             "core_m": ps["core_m"] if ps else g.m,
+            "pruned_edges": ps["pruned_edges"] if ps else 0,
+            "contracted_edges": ps["contracted_edges"] if ps else 0,
             # per-round observed-error trajectory from the engine (empty for
             # solvers that own their loop, e.g. the shard_map modes) — the
             # artifact shows convergence curves, not just endpoints

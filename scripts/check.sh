@@ -48,15 +48,8 @@ echo "== perf: BENCH_ppr.json (queries/sec + latency percentiles) =="
 python -m benchmarks.bench_ppr --scale 8 --queries 24 --slots 4 \
     --json BENCH_ppr.json
 
-echo "== docs smoke: README variant table covers the registry =="
-python - <<'EOF'
-from repro.core.solver import list_variants
-
-readme = open("README.md", encoding="utf-8").read()
-missing = [v for v in list_variants() if f"`{v}`" not in readme]
-assert not missing, f"README.md variant table is missing: {missing}"
-print(f"README.md covers all {len(list_variants())} registry variants")
-EOF
+echo "== docs smoke: registry <-> README table + docs/*.md code references =="
+python scripts/docs_check.py
 
 echo "== perf trajectory: BENCH_variants.json (quick, 1 dataset) =="
 python -m benchmarks.bench_variants --datasets webStanford --scale-down 2048 \

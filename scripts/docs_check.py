@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Docs smoke: the documentation may not drift from the code.
+
+Two checks, both driven from the live registry / live imports:
+
+1. every registered variant name appears (backticked) in README.md's
+   variant table;
+2. every backticked ``repro.*`` code reference in README.md and docs/*.md
+   — ``module``, ``module.symbol`` or ``module.Class.attr``, optionally
+   with a call suffix — resolves by importing the longest importable module
+   prefix and walking the remaining attributes.
+
+Run from the repo root (check.sh does): ``python scripts/docs_check.py``.
+Exits non-zero listing every stale reference, so a renamed function whose
+docs were forgotten fails CI instead of rotting quietly.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+_BACKTICK = re.compile(r"`([^`\n]+)`")
+_REF = re.compile(r"^repro(\.\w+)+$")
+
+
+def extract_refs(text: str) -> set[str]:
+    refs = set()
+    for span in _BACKTICK.findall(text):
+        candidate = span.split("(")[0].strip()  # drop any call suffix
+        if _REF.match(candidate):
+            refs.add(candidate)
+    return refs
+
+
+def resolve(ref: str) -> bool:
+    parts = ref.split(".")
+    mod = None
+    cut = 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            cut = i
+            break
+        except ImportError:
+            continue
+    if mod is None:
+        return False
+    obj = mod
+    for attr in parts[cut:]:
+        if not hasattr(obj, attr):
+            return False
+        obj = getattr(obj, attr)
+    return True
+
+
+def main() -> int:
+    failures: list[str] = []
+
+    from repro.core.solver import list_variants
+
+    readme = (ROOT / "README.md").read_text(encoding="utf-8")
+    missing = [v for v in list_variants() if f"`{v}`" not in readme]
+    if missing:
+        failures.append(f"README.md variant table is missing: {missing}")
+    else:
+        print(f"README.md covers all {len(list_variants())} registry variants")
+
+    n_refs = 0
+    for path in DOC_FILES:
+        refs = extract_refs(path.read_text(encoding="utf-8"))
+        n_refs += len(refs)
+        for ref in sorted(refs):
+            if not resolve(ref):
+                failures.append(f"{path.relative_to(ROOT)}: unresolvable "
+                                f"code reference `{ref}`")
+    print(f"resolved {n_refs} code references across "
+          f"{len(DOC_FILES)} docs files")
+
+    if failures:
+        for f in failures:
+            print(f"DOCS CHECK FAILED: {f}", file=sys.stderr)
+        return 1
+    print("docs_check: all references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -50,8 +50,12 @@ from repro.utils.jaxcompat import make_mesh, shard_map
 def _sweep(pr_full, local, srcs, dsts, emask, inv_out, base, d, vp, offset):
     """One Gauss–Seidel sweep of the local partition against pr_full.
 
-    ``base`` is the per-vertex additive term — (1-d)/n plus, when dangling
-    mass is handled, this round's redistributed d·(dangling mass)/n."""
+    ``base`` is the per-vertex additive term — scalar ``(1-d)/n`` (or the
+    ``(vp,)`` bias-scaled vector on biased graphs) plus, when dangling mass
+    is handled, this round's redistributed d·(dangling mass)/n.  ``emask``
+    is the bundle's effective per-edge multiplier ({0,1} validity on
+    unweighted graphs, the per-edge weights on weighted ones — see
+    ``PartitionedGraph.edge_mult``)."""
     pr_full = jax.lax.dynamic_update_slice_in_dim(pr_full, local, offset, 0)
     contrib = (pr_full * inv_out)[srcs] * emask
     acc = jax.ops.segment_sum(contrib, dsts, num_segments=vp, indices_are_sorted=True)
@@ -89,11 +93,14 @@ def distributed_pagerank(
     base = jnp.asarray((1.0 - d) / n, dtype)
     thr = jnp.asarray(threshold, dtype)
 
-    def solver(src_pad, dst_local, emask, inv_out, dangling):
-        # shapes inside shard_map: src_pad (1, cap), inv_out (n_pad,) replicated
+    def solver(src_pad, dst_local, emask, inv_out, dangling, *rest):
+        # shapes inside shard_map: src_pad (1, cap), inv_out (n_pad,)
+        # replicated; rest = (bias_pad,) on biased graphs, () otherwise
         srcs, dsts, msk = src_pad[0], dst_local[0], emask[0]
         idx = jax.lax.axis_index(axis)
         offset = idx * vp
+        base_local = base if not rest else base * jax.lax.dynamic_slice_in_dim(
+            rest[0], offset, vp, 0)
         local0 = jnp.full((vp,), 1.0 / n, dtype)
 
         def round_body(state):
@@ -102,8 +109,8 @@ def distributed_pagerank(
             pr_full = jax.lax.all_gather(local, axis, tiled=True)
             # dangling-mass snapshot at round start (iteration-start semantics,
             # one O(n) reduction per exchange; padding slots have dangling=0)
-            base_eff = base + (d * jnp.sum(pr_full * dangling) / n
-                               if handle_dangling else 0.0)
+            base_eff = base_local + (d * jnp.sum(pr_full * dangling) / n
+                                     if handle_dangling else 0.0)
 
             def do_sweeps(local):
                 # Convergence metric = FIRST sweep's residual (fresh-halo
@@ -139,18 +146,23 @@ def distributed_pagerank(
         local, _, err_global, rounds = jax.lax.while_loop(round_cond, round_body, init)
         return local, err_global[None], rounds[None]
 
+    # weights ride in the emask slot (PartitionedGraph.edge_mult — already
+    # partitioned alongside the edges); the bias vector is one extra
+    # replicated operand, present only on biased graphs
+    extra = () if pg.bias_pad is None else (pg.bias_pad,)
     mapped = shard_map(
         solver,
         mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(), P()),
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(), P())
+        + (P(),) * len(extra),
         out_specs=(P(axis), P(axis), P(axis)),
         check_vma=False,
     )
 
     # Note: stale-mode GS sweeps inside one round reuse the *same* snapshot
     # for remote ranks; pr_full is refreshed with fresh local ranks each sweep.
-    pr, errs, rounds = jax.jit(mapped)(pg.src_pad, pg.dst_local, pg.emask,
-                                       pg.inv_out, pg.dangling)
+    pr, errs, rounds = jax.jit(mapped)(pg.src_pad, pg.dst_local, pg.edge_mult,
+                                       pg.inv_out, pg.dangling, *extra)
     return PageRankResult(pr[:n], rounds[0], jnp.max(errs))
 
 
@@ -188,10 +200,12 @@ def distributed_pagerank_topk(
     base = jnp.asarray((1.0 - d) / n, dtype)
     thr = jnp.asarray(threshold, dtype)
 
-    def solver(src_pad, dst_local, emask, inv_out, dangling):
+    def solver(src_pad, dst_local, emask, inv_out, dangling, *rest):
         srcs, dsts, msk = src_pad[0], dst_local[0], emask[0]
         idx_range = jax.lax.axis_index(axis)
         offset = idx_range * vp
+        base_local = base if not rest else base * jax.lax.dynamic_slice_in_dim(
+            rest[0], offset, vp, 0)
         local0 = jnp.full((vp,), 1.0 / n, dtype)
         snap0 = jnp.full((n_pad,), 1.0 / n, dtype)
         sent0 = jnp.full((vp,), 1.0 / n, dtype)
@@ -212,9 +226,9 @@ def distributed_pagerank_topk(
             # point unchanged (Lemma 2)
             if handle_dangling:
                 pr_eff = jax.lax.dynamic_update_slice_in_dim(snap, local, offset, 0)
-                base_eff = base + d * jnp.sum(pr_eff * dangling) / n
+                base_eff = base_local + d * jnp.sum(pr_eff * dangling) / n
             else:
-                base_eff = base
+                base_eff = base_local
 
             # 2. local Gauss–Seidel sweeps against the snapshot
             def one(i, carry):
@@ -238,15 +252,17 @@ def distributed_pagerank_topk(
         local, _, _, _, err_global, rounds = jax.lax.while_loop(cond, round_body, init)
         return local, err_global[None], rounds[None]
 
+    extra = () if pg.bias_pad is None else (pg.bias_pad,)
     mapped = shard_map(
         solver,
         mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(), P()),
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(), P())
+        + (P(),) * len(extra),
         out_specs=(P(axis), P(axis), P(axis)),
         check_vma=False,
     )
-    pr, errs, rounds = jax.jit(mapped)(pg.src_pad, pg.dst_local, pg.emask,
-                                       pg.inv_out, pg.dangling)
+    pr, errs, rounds = jax.jit(mapped)(pg.src_pad, pg.dst_local, pg.edge_mult,
+                                       pg.inv_out, pg.dangling, *extra)
     return PageRankResult(pr[:n], rounds[0], jnp.max(errs))
 
 

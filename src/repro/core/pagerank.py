@@ -40,6 +40,14 @@ Variant map (paper §4 → registry name → composition):
 Every variant accepts ``handle_dangling`` and, when set, converges to the
 same dangling-redistributed fixed point as :func:`pagerank_numpy` (the
 sequential oracle) — the registry round-trip tests assert this (Lemma 2).
+
+Every variant also honours **weighted/biased graphs** (optional per-edge
+``Graph.weights`` scaling each contribution, optional per-vertex
+``Graph.bias`` multiplying the teleport base) — the representation the
+STIC-D plan's mid-graph chain contraction produces, validated against the
+weighted :func:`pagerank_numpy` oracle by tests/test_weighted.py.
+Unweighted graphs (``weights=None``/``bias=None``) trace to the exact
+pre-weighted computation — no extra multiplies.
 """
 from __future__ import annotations
 
@@ -87,13 +95,19 @@ __all__ = [
 
 @dataclasses.dataclass
 class DeviceGraph:
-    """dst-sorted COO on device + degree info (vertex-centric variants)."""
+    """dst-sorted COO on device + degree info (vertex-centric variants).
+
+    ``weights``/``bias`` mirror the host graph's optional per-edge weights
+    and per-vertex teleport-bias multiplier (``None`` = unweighted fast
+    path — the sweeps skip the extra multiplies entirely)."""
 
     n: int
     src: jax.Array  # (m,) int32 — sorted by dst
     dst: jax.Array  # (m,) int32
     inv_out: jax.Array  # (n,) — 1/outdeg, 0 for dangling
     dangling: jax.Array  # (n,) float mask of outdeg==0 vertices
+    weights: jax.Array | None = None  # (m,) per-edge weight, dst-sorted
+    bias: jax.Array | None = None  # (n,) base multiplier
 
     @classmethod
     def from_graph(cls, g: Graph, dtype=jnp.float32) -> "DeviceGraph":
@@ -104,12 +118,19 @@ class DeviceGraph:
             dst=jnp.asarray(g.dst),
             inv_out=jnp.asarray(inv, dtype=dtype),
             dangling=jnp.asarray(dang, dtype=dtype),
+            weights=(None if g.weights is None
+                     else jnp.asarray(g.weights, dtype=dtype)),
+            bias=None if g.bias is None else jnp.asarray(g.bias, dtype=dtype),
         )
 
 
 @dataclasses.dataclass
 class EdgeCentricGraph:
-    """Alg-2 layout: out-CSR scatter slots (``offsetList``) + dst order."""
+    """Alg-2 layout: out-CSR scatter slots (``offsetList``) + dst order.
+
+    Per-edge weights stay in dst-sorted order: phase II scales the gathered
+    contribution list, which is equivalent to weighting at scatter time but
+    keeps phase I a pure permutation."""
 
     n: int
     m: int
@@ -118,6 +139,8 @@ class EdgeCentricGraph:
     dst: jax.Array  # (m,) int32 — dst-sorted order (phase II)
     inv_out: jax.Array
     dangling: jax.Array
+    weights: jax.Array | None = None  # (m,) dst-sorted per-edge weight
+    bias: jax.Array | None = None  # (n,) base multiplier
 
     @classmethod
     def from_graph(cls, g: Graph, dtype=jnp.float32) -> "EdgeCentricGraph":
@@ -133,6 +156,9 @@ class EdgeCentricGraph:
             dst=jnp.asarray(g.dst),
             inv_out=jnp.asarray(inv, dtype=dtype),
             dangling=jnp.asarray(dang, dtype=dtype),
+            weights=(None if g.weights is None
+                     else jnp.asarray(g.weights, dtype=dtype)),
+            bias=None if g.bias is None else jnp.asarray(g.bias, dtype=dtype),
         )
 
 
@@ -155,6 +181,15 @@ class PartitionedGraph:
     emask: jax.Array  # (p, cap) dtype — 1 for real edges
     inv_out: jax.Array  # (n_pad,)
     dangling: jax.Array  # (n_pad,)
+    w_pad: jax.Array | None = None  # (p, cap) per-edge weight (0 = padding)
+    bias_pad: jax.Array | None = None  # (n_pad,) base multiplier (0 padding)
+
+    @property
+    def edge_mult(self) -> jax.Array:
+        """Effective per-edge multiplier: weights when present, else the
+        {0,1} validity mask — sweeps multiply by exactly one of the two, so
+        the unweighted path pays nothing extra."""
+        return self.emask if self.w_pad is None else self.w_pad
 
     @classmethod
     def from_graph(cls, g: Graph, p: int, dtype=jnp.float32) -> "PartitionedGraph":
@@ -166,13 +201,20 @@ class PartitionedGraph:
         src_pad = np.zeros((p, cap), dtype=np.int32)
         dst_local = np.zeros((p, cap), dtype=np.int32)
         emask = np.zeros((p, cap), dtype=np.float64)
+        w_pad = np.zeros((p, cap), dtype=np.float64) if g.weights is not None else None
         for i in range(p):
             e0, e1 = e_bounds[i], e_bounds[i + 1]
             k = e1 - e0
             src_pad[i, :k] = g.src[e0:e1]
             dst_local[i, :k] = g.dst[e0:e1] - i * vp
             emask[i, :k] = 1.0
+            if w_pad is not None:
+                w_pad[i, :k] = g.weights[e0:e1]
         inv, dang = inv_out_and_dangling(g.out_degree, n_pad)
+        bias_pad = None
+        if g.bias is not None:
+            bias_pad = np.zeros(n_pad, dtype=np.float64)
+            bias_pad[:g.n] = g.bias
         return cls(
             n=g.n,
             p=p,
@@ -183,6 +225,9 @@ class PartitionedGraph:
             emask=jnp.asarray(emask, dtype=dtype),
             inv_out=jnp.asarray(inv, dtype=dtype),
             dangling=jnp.asarray(dang, dtype=dtype),
+            w_pad=None if w_pad is None else jnp.asarray(w_pad, dtype=dtype),
+            bias_pad=(None if bias_pad is None
+                      else jnp.asarray(bias_pad, dtype=dtype)),
         )
 
 
@@ -198,17 +243,28 @@ def pagerank_numpy(
     max_iter: int = 10_000,
     handle_dangling: bool = False,
 ) -> tuple[np.ndarray, int]:
-    """Sequential Jacobi PageRank — the paper's baseline & Lemma-2 reference."""
+    """Sequential Jacobi PageRank — the paper's baseline & Lemma-2 reference.
+
+    Doubles as the **weighted float64 oracle**: with ``g.weights`` each edge's
+    contribution is scaled per edge, with ``g.bias`` the teleport base is
+    scaled per vertex — ``pr = base·bias + d·Σ w·pr(src)/outdeg(src)`` —
+    which is the fixed point every registered variant must reproduce on
+    weighted graphs (asserted by the tests/test_weighted.py property tier).
+    """
     n = g.n
     inv_out = np.where(g.out_degree > 0, 1.0 / np.maximum(g.out_degree, 1), 0.0)
+    base = (1.0 - d) / n
+    base_vec = base if g.bias is None else base * g.bias
     pr = np.full(n, 1.0 / n)
     for it in range(1, max_iter + 1):
-        contrib = pr * inv_out
+        contrib = (pr * inv_out)[g.src]
+        if g.weights is not None:
+            contrib = contrib * g.weights
         acc = np.zeros(n)
-        np.add.at(acc, g.dst, contrib[g.src])
-        new = (1.0 - d) / n + d * acc
+        np.add.at(acc, g.dst, contrib)
+        new = base_vec + d * acc
         if handle_dangling:
-            new += d * pr[g.out_degree == 0].sum() / n
+            new = new + d * pr[g.out_degree == 0].sum() / n
         err = np.abs(new - pr).max()
         pr = new
         if err <= threshold:
@@ -229,15 +285,20 @@ def l1_norm(pr_a, pr_b) -> float:
 @functools.partial(
     jax.jit, static_argnames=("n", "max_iter", "handle_dangling", "perforate")
 )
-def _barrier_impl(src, dst, inv_out, dangling, *, n, d, threshold, max_iter,
-                  handle_dangling, perforate):
+def _barrier_impl(src, dst, inv_out, dangling, weights, bias,
+                  *, n, d, threshold, max_iter, handle_dangling, perforate):
     dtype = inv_out.dtype
     base = jnp.asarray((1.0 - d) / n, dtype)
+    # weights=None / bias=None are empty pytrees: the branches resolve at
+    # trace time, so the unweighted path compiles to exactly the old sweep
+    base_vec = base if bias is None else base * bias
 
     def sweep(pr):
         contrib = (pr * inv_out)[src]
+        if weights is not None:
+            contrib = contrib * weights
         acc = jax.ops.segment_sum(contrib, dst, num_segments=n, indices_are_sorted=True)
-        new = base + d * acc
+        new = base_vec + d * acc
         if handle_dangling:
             new = new + d * jnp.sum(pr * dangling) / n
         return new
@@ -257,7 +318,7 @@ def pagerank_barrier(
     handle_dangling: bool = False,
 ) -> PageRankResult:
     return _barrier_impl(
-        dg.src, dg.dst, dg.inv_out, dg.dangling,
+        dg.src, dg.dst, dg.inv_out, dg.dangling, dg.weights, dg.bias,
         n=dg.n, d=d, threshold=threshold, max_iter=max_iter,
         handle_dangling=handle_dangling, perforate=False,
     )
@@ -271,7 +332,7 @@ def pagerank_barrier_opt(
     handle_dangling: bool = False,
 ) -> PageRankResult:
     return _barrier_impl(
-        dg.src, dg.dst, dg.inv_out, dg.dangling,
+        dg.src, dg.dst, dg.inv_out, dg.dangling, dg.weights, dg.bias,
         n=dg.n, d=d, threshold=threshold, max_iter=max_iter,
         handle_dangling=handle_dangling, perforate=True,
     )
@@ -283,19 +344,22 @@ def pagerank_barrier_opt(
 
 
 @functools.partial(jax.jit, static_argnames=("n", "m", "max_iter", "handle_dangling"))
-def _barrier_edge_impl(src_by_src, edge_slot, dst, inv_out, dangling,
-                       *, n, m, d, threshold, max_iter, handle_dangling):
+def _barrier_edge_impl(src_by_src, edge_slot, dst, inv_out, dangling, weights,
+                       bias, *, n, m, d, threshold, max_iter, handle_dangling):
     dtype = inv_out.dtype
     base = jnp.asarray((1.0 - d) / n, dtype)
+    base_vec = base if bias is None else base * bias
 
     def sweep(pr):
         # Phase I: every vertex scatters its contribution into its out-edges'
         # slots of the (dst-ordered) contribution list — paper Alg 2 l.9-12.
         contrib_by_src = (pr * inv_out)[src_by_src]
         contribution_list = jnp.zeros((m,), dtype).at[edge_slot].set(contrib_by_src)
+        if weights is not None:  # per-edge weights, applied in dst order
+            contribution_list = contribution_list * weights
         # Phase II: gather per destination — paper Alg 2 l.16-23.
         acc = jax.ops.segment_sum(contribution_list, dst, num_segments=n, indices_are_sorted=True)
-        new = base + d * acc
+        new = base_vec + d * acc
         if handle_dangling:
             new = new + d * jnp.sum(pr * dangling) / n
         # Phase III (error fold + swap) is the engine's loop-carried update.
@@ -315,6 +379,7 @@ def pagerank_barrier_edge(
 ) -> PageRankResult:
     return _barrier_edge_impl(
         eg.src_by_src, eg.edge_slot, eg.dst, eg.inv_out, eg.dangling,
+        eg.weights, eg.bias,
         n=eg.n, m=eg.m, d=d, threshold=threshold, max_iter=max_iter,
         handle_dangling=handle_dangling,
     )
@@ -331,7 +396,7 @@ def pagerank_barrier_edge(
                      "thread_level", "handle_dangling"),
 )
 def _nosync_impl(
-    src_pad, dst_local, emask, inv_out, dangling,
+    src_pad, dst_local, emask, inv_out, dangling, bias_pad,
     *, n, p, vp, n_pad, d, threshold, max_iter, perforate, thread_level,
     handle_dangling,
 ):
@@ -339,12 +404,18 @@ def _nosync_impl(
     base = jnp.asarray((1.0 - d) / n, dtype)
 
     def sweep(i, pr, dmass):
+        # `emask` is the effective per-edge multiplier: the {0,1} validity
+        # mask on unweighted graphs, the per-edge weights (0 on padding
+        # lanes) on weighted ones — one multiply either way.
         srcs = jax.lax.dynamic_slice_in_dim(src_pad, i, 1, 0)[0]
         dsts = jax.lax.dynamic_slice_in_dim(dst_local, i, 1, 0)[0]
         msk = jax.lax.dynamic_slice_in_dim(emask, i, 1, 0)[0]
         contrib = (pr * inv_out)[srcs] * msk
         acc = jax.ops.segment_sum(contrib, dsts, num_segments=vp, indices_are_sorted=True)
-        return base + d * acc + dmass
+        if bias_pad is None:
+            return base + d * acc + dmass
+        b_i = jax.lax.dynamic_slice_in_dim(bias_pad, i * vp, vp, 0)
+        return base * b_i + d * acc + dmass
 
     def dangling_mass(pr):
         # snapshot at iteration start (not per partition) — same fixed point
@@ -375,7 +446,8 @@ def pagerank_nosync(
     handle_dangling: bool = False,
 ) -> PageRankResult:
     return _nosync_impl(
-        pg.src_pad, pg.dst_local, pg.emask, pg.inv_out, pg.dangling,
+        pg.src_pad, pg.dst_local, pg.edge_mult, pg.inv_out, pg.dangling,
+        pg.bias_pad,
         n=pg.n, p=pg.p, vp=pg.vp, n_pad=pg.n_pad,
         d=d, threshold=threshold, max_iter=max_iter,
         perforate=perforate, thread_level=thread_level,
@@ -394,7 +466,10 @@ class IdenticalNodePlan:
 
     ``rep_of[u]``: representative vertex of u's identical-in-neighbour class.
     Only edges whose dst is a representative are kept; after each sweep ranks
-    are broadcast from representatives to their class members.
+    are broadcast from representatives to their class members.  On weighted/
+    biased graphs the class key covers weights and bias too (see
+    :meth:`repro.graphs.csr.Graph.in_neighbor_classes`), so sharing stays
+    exact: the representative's weighted in-edges and bias ARE the class's.
     """
 
     n: int
@@ -404,6 +479,8 @@ class IdenticalNodePlan:
     dst_class: jax.Array  # class id per kept edge
     inv_out: jax.Array
     dangling: jax.Array
+    weights: jax.Array | None = None  # kept-edge weights
+    bias: jax.Array | None = None  # (n,) base multiplier
 
     @classmethod
     def from_graph(cls, g: Graph, dtype=jnp.float32) -> "IdenticalNodePlan":
@@ -423,21 +500,27 @@ class IdenticalNodePlan:
             dst_class=jnp.asarray(cls_of[g.dst[keep]].astype(np.int32)),
             inv_out=jnp.asarray(inv, dtype=dtype),
             dangling=jnp.asarray(dang, dtype=dtype),
+            weights=(None if g.weights is None
+                     else jnp.asarray(g.weights[keep], dtype=dtype)),
+            bias=None if g.bias is None else jnp.asarray(g.bias, dtype=dtype),
         )
 
 
 @functools.partial(
     jax.jit, static_argnames=("n", "n_classes", "max_iter", "handle_dangling")
 )
-def _identical_impl(cls_of, src, dst_class, inv_out, dangling,
+def _identical_impl(cls_of, src, dst_class, inv_out, dangling, weights, bias,
                     *, n, n_classes, d, threshold, max_iter, handle_dangling):
     dtype = inv_out.dtype
     base = jnp.asarray((1.0 - d) / n, dtype)
+    base_vec = base if bias is None else base * bias
 
     def sweep(pr):
         contrib = (pr * inv_out)[src]
+        if weights is not None:
+            contrib = contrib * weights
         acc_cls = jax.ops.segment_sum(contrib, dst_class, num_segments=n_classes)
-        new = base + d * acc_cls[cls_of]  # one computation per class, broadcast
+        new = base_vec + d * acc_cls[cls_of]  # one computation per class, broadcast
         if handle_dangling:
             # dangling mass is uniform across vertices, so identical-in-
             # neighbour classes stay identical under redistribution.
@@ -458,6 +541,7 @@ def pagerank_identical(
 ) -> PageRankResult:
     return _identical_impl(
         plan.cls_of, plan.src, plan.dst_class, plan.inv_out, plan.dangling,
+        plan.weights, plan.bias,
         n=plan.n, n_classes=plan.n_classes, d=d, threshold=threshold,
         max_iter=max_iter, handle_dangling=handle_dangling,
     )
@@ -531,6 +615,7 @@ register_variant(
     layout="partitioned", backend="jax", schedule="nosync",
 )
 # STIC-D decomposition as a plan stage (identical+chain+dead pruned at build,
+# mid-graph chains contracted into weighted core edges + bias folds,
 # reconstructed after the core converges).  The plan composes with ANY inner
 # build — plan first, partition/block the core second — these two entries are
 # the paper's Alg-4 completion on both schedules.
@@ -538,14 +623,14 @@ register_variant(
     "barrier_sticd",
     build=plan_build("barrier"),
     run=plan_run,
-    description="STIC-D plan (identical+chain+dead pruned) + Alg-1 barrier core solve",
+    description="STIC-D plan (identical+chain+dead pruned, chains contracted) + Alg-1 core solve",
     layout="sticd_device", backend="jax", schedule="barrier",
 )
 register_variant(
     "nosync_sticd",
     build=plan_build("nosync"),
     run=plan_run,
-    description="STIC-D plan + Alg-3 no-sync core solve (core graph partitioned)",
+    description="STIC-D plan + Alg-3 no-sync core solve (weighted core partitioned)",
     options=("thread_level",),
     layout="sticd_partitioned", backend="jax", schedule="nosync",
 )

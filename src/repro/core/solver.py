@@ -411,12 +411,17 @@ def get_variant(name: str) -> Variant:
         ) from None
 
 
-def build_variant(name: str, g, **opts) -> tuple[Variant, Any]:
+def build_variant(name: str, g, *, d: float = DEFAULT_DAMPING,
+                  **opts) -> tuple[Variant, Any]:
     """Validate ``opts`` and build ``name``'s device bundle from host graph
     ``g``; returns ``(variant, bundle)``.  Callers that need the bundle (the
     launcher records its actual partition count in checkpoints) use this and
     then ``variant.run(bundle, ...)``; everyone else uses
     :func:`solve_variant`.
+
+    ``d`` is forwarded to the build (most builds ignore it): a plan-staged
+    build bakes the damping factor into contracted edge weights, so building
+    with the ``d`` you intend to run avoids :func:`plan_run`'s re-plan.
 
     Unknown options raise instead of being silently dropped — a typo'd or
     unsupported option (e.g. ``perforate`` on ``nosync``: use ``nosync_opt``)
@@ -428,7 +433,7 @@ def build_variant(name: str, g, **opts) -> tuple[Variant, Any]:
             f"variant {name!r} does not accept option(s) {sorted(unknown)}; "
             f"accepted: {sorted(_TRANSPORT_OPTS | set(v.options))}"
         )
-    return v, v.build(g, **opts)
+    return v, v.build(g, d=d, **opts)
 
 
 def bundle_partitions(bundle) -> int:
@@ -453,11 +458,17 @@ class PlannedBundle:
     ``bundle`` is ``None`` when the plan pruned every vertex (the core is
     empty — e.g. a zero-edge graph is all-dead); :func:`plan_run` then skips
     the inner solve and the reconstruction pass produces the whole vector.
+
+    ``build_opts``/``plan_opts`` record what built this bundle so
+    :func:`plan_run` can re-plan when the run-time damping factor differs
+    from the one baked into the plan's contracted edge weights.
     """
 
     plan: Any  # repro.graphs.csr.DecompositionPlan
     inner: Variant
     bundle: Any
+    build_opts: dict = dataclasses.field(default_factory=dict)
+    plan_opts: dict = dataclasses.field(default_factory=dict)
 
     @property
     def p(self) -> int:
@@ -474,18 +485,29 @@ def plan_build(inner: str, **plan_opts) -> Callable:
 
     Returns a ``build(g, **opts)`` suitable for :func:`register_variant`:
     it runs :meth:`repro.graphs.csr.DecompositionPlan.from_graph` (with
-    ``plan_opts`` — e.g. ``identical=False``) and hands ``plan.core`` to the
-    inner variant's build, so partitioning/blocking happens on the shrunken
-    graph ("plan first, partition the core second").
+    ``plan_opts`` — e.g. ``identical=False`` or ``contract=False`` for the
+    suffix-only legacy closure) and hands ``plan.core`` to the inner
+    variant's build, so partitioning/blocking happens on the shrunken graph
+    ("plan first, partition the core second").  The core is weighted when
+    chains were contracted mid-graph (per-edge ``d^k`` weights + per-vertex
+    teleport bias), which every registered build consumes natively.
     """
 
     def build(g, **opts):
         from repro.graphs.csr import DecompositionPlan
 
-        plan = DecompositionPlan.from_graph(g, **plan_opts)
+        # bake the caller's damping factor into the plan (build_variant
+        # forwards it) unless the registration pinned one explicitly —
+        # plan_run's re-plan then only fires when a bundle built for one d
+        # is later run with another
+        p_opts = dict(plan_opts)
+        p_opts.setdefault("d", opts.get("d", DEFAULT_DAMPING))
+        b_opts = {k: val for k, val in opts.items() if k != "d"}
+        plan = DecompositionPlan.from_graph(g, **p_opts)
         v = get_variant(inner)
-        bundle = v.build(plan.core, **opts) if plan.core.n else None
-        return PlannedBundle(plan=plan, inner=v, bundle=bundle)
+        bundle = v.build(plan.core, **b_opts) if plan.core.n else None
+        return PlannedBundle(plan=plan, inner=v, bundle=bundle,
+                             build_opts=b_opts, plan_opts=p_opts)
 
     return build
 
@@ -503,10 +525,28 @@ def plan_run(
 
     The inner variant always solves the core with ``handle_dangling=False``
     — dangling redistribution is applied in closed form at reconstruction
-    (the redistributed fixed point is the plain one normalised to unit L1
-    mass), which keeps pruned sinks' mass exact without a feedback loop
-    between the core solve and the pruned region.
+    (the redistributed fixed point is a scalar multiple of the plain one —
+    L1 normalisation on unweighted graphs, the general
+    ``base/(base − (d/n)·Σ_dang pr)`` factor on weighted ones), which keeps
+    pruned sinks' mass exact without a feedback loop between the core solve
+    and the pruned region.
+
+    Contracted chains bake the damping factor into the core's edge weights
+    and bias (``d^k`` per collapsed chain of length ``k``), so a run-time
+    ``d`` different from the plan's re-plans and rebuilds the inner bundle
+    first — correctness over cache: the stale bundle would silently solve a
+    different graph.
     """
+    if b.plan.d_dependent and not np.isclose(d, b.plan.d):
+        plan_opts = dict(b.plan_opts)
+        plan_opts["d"] = d
+        from repro.graphs.csr import DecompositionPlan
+
+        plan = DecompositionPlan.from_graph(b.plan.full, **plan_opts)
+        bundle = (b.inner.build(plan.core, **b.build_opts)
+                  if plan.core.n else None)
+        b = PlannedBundle(plan=plan, inner=b.inner, bundle=bundle,
+                          build_opts=b.build_opts, plan_opts=plan_opts)
     if b.bundle is None:  # fully-pruned graph: reconstruction does it all
         it, err, residuals = np.asarray(0, np.int32), np.asarray(0.0), None
         core_pr = np.zeros(0, dtype=np.float64)
@@ -541,6 +581,6 @@ def solve_variant(
 ) -> PageRankResult:
     """Build the bundle for ``name`` and solve — the one-call entry point used
     by the launcher, benchmarks, and the registry round-trip tests."""
-    v, bundle = build_variant(name, g, **opts)
+    v, bundle = build_variant(name, g, d=d, **opts)
     return v.run(bundle, d=d, threshold=threshold, max_iter=max_iter,
                  handle_dangling=handle_dangling, **opts)

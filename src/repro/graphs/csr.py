@@ -5,6 +5,19 @@ The paper (§4) stores graphs in CSR and iterates either vertex-centric
 the hot path is a gather + segment-sum over edges sorted by destination; the
 Pallas kernel additionally wants a 2-D *blocked* layout (propagation blocking,
 paper ref [17]) so that the rank slice addressed by one tile fits in VMEM.
+
+Graphs are optionally **weighted and biased** (see :class:`Graph.weights` /
+:class:`Graph.bias`): the generalized sweep every solver applies is
+
+    pr(v) = base·bias(v) + d · Σ_{(u,v)∈E} w(u,v) · pr(u) / outdeg(u)
+
+with ``base = (1-d)/n``.  ``weights=None`` / ``bias=None`` mean all-ones and
+every solver keeps its unweighted fast path in that case.  The weighted form
+is what lets :class:`DecompositionPlan` contract chains *in the middle* of
+the graph: a pruned chain ``u→c₁→…→c_k→v`` becomes one core edge ``u→v``
+with weight ``d^k`` plus a fold of the chain's teleport contribution
+``d+d²+…+d^k`` into ``v``'s bias (see docs/DECOMPOSITION.md for the worked
+derivation).
 """
 from __future__ import annotations
 
@@ -12,6 +25,12 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+# Matches repro.core.solver.DEFAULT_DAMPING (not imported: csr is the
+# dependency-free base layer).  Contracted-edge weights are powers of the
+# damping factor, so the decomposition must bake a concrete d at plan time;
+# solver.plan_run re-plans when the run-time d differs.
+_DEFAULT_DAMPING = 0.85
 
 
 def _concat_ranges(ptr: np.ndarray, verts: np.ndarray) -> np.ndarray:
@@ -36,6 +55,14 @@ class Graph:
     ``src``/``dst`` are parallel edge arrays sorted by ``dst`` (then ``src``):
     this is exactly the order a CSR-of-in-links traversal visits edges, so the
     vertex-centric paper algorithms map onto contiguous edge ranges.
+
+    ``weights`` (per-edge, aligned with the dst-sorted edge arrays) scales
+    each edge's ``pr(src)/outdeg(src)`` contribution; ``bias`` (per-vertex)
+    multiplies the ``(1-d)/n`` teleport base.  Both default to ``None``
+    (all-ones): every solver detects ``None`` and keeps its unweighted fast
+    path.  Weights are expected in ``(0, 1]`` — the decomposition only emits
+    powers of ``d`` — which also keeps the push solver's L1 certificate
+    valid (substochastic walk matrix).
     """
 
     n: int
@@ -43,6 +70,8 @@ class Graph:
     dst: np.ndarray  # (m,) int32, non-decreasing
     out_degree: np.ndarray  # (n,) int32
     in_ptr: np.ndarray  # (n+1,) int64 CSR indptr over dst
+    weights: Optional[np.ndarray] = None  # (m,) float64, dst-sorted; None = 1s
+    bias: Optional[np.ndarray] = None  # (n,) float64 base multiplier; None = 1s
 
     # CSR by source (out-links) — needed by the edge-centric variants, built lazily.
     _out_ptr: Optional[np.ndarray] = None
@@ -54,7 +83,9 @@ class Graph:
         return int(self.src.shape[0])
 
     @classmethod
-    def from_edges(cls, n: int, src: np.ndarray, dst: np.ndarray) -> "Graph":
+    def from_edges(cls, n: int, src: np.ndarray, dst: np.ndarray,
+                   weights: Optional[np.ndarray] = None,
+                   bias: Optional[np.ndarray] = None) -> "Graph":
         src = np.asarray(src, dtype=np.int32)
         dst = np.asarray(dst, dtype=np.int32)
         if src.shape != dst.shape:
@@ -63,10 +94,20 @@ class Graph:
             raise ValueError("edge endpoint out of range")
         order = np.lexsort((src, dst))
         src, dst = src[order], dst[order]
+        if weights is not None:
+            weights = np.asarray(weights, dtype=np.float64)
+            if weights.shape != src.shape:
+                raise ValueError("weights must parallel src/dst")
+            weights = weights[order]
+        if bias is not None:
+            bias = np.asarray(bias, dtype=np.float64)
+            if bias.shape != (n,):
+                raise ValueError(f"bias must have shape ({n},)")
         out_degree = np.bincount(src, minlength=n).astype(np.int32)
         in_ptr = np.zeros(n + 1, dtype=np.int64)
         np.cumsum(np.bincount(dst, minlength=n), out=in_ptr[1:])
-        return cls(n=n, src=src, dst=dst, out_degree=out_degree, in_ptr=in_ptr)
+        return cls(n=n, src=src, dst=dst, out_degree=out_degree, in_ptr=in_ptr,
+                   weights=weights, bias=bias)
 
     def out_csr(self):
         """CSR over out-links: (out_ptr, out_dst, edge_slot).
@@ -87,12 +128,20 @@ class Graph:
 
     def in_neighbor_classes(self) -> np.ndarray:
         """STIC-D 'identical nodes': class id per vertex; vertices with the
-        same in-neighbor set share a class (identical PageRank)."""
+        same in-neighbor set share a class (identical PageRank).
+
+        On weighted/biased graphs the class key also covers the in-edge
+        weights and the vertex's bias — two vertices share a rank only when
+        their whole update rule matches, not just the neighbour set."""
         keys = {}
         cls_of = np.empty(self.n, dtype=np.int64)
         for u in range(self.n):
             lo, hi = self.in_ptr[u], self.in_ptr[u + 1]
             key = self.src[lo:hi].tobytes()
+            if self.weights is not None:
+                key = (key, self.weights[lo:hi].tobytes())
+            if self.bias is not None:
+                key = (key, float(self.bias[u]))
             cls_of[u] = keys.setdefault(key, len(keys))
         return cls_of
 
@@ -126,6 +175,21 @@ class Graph:
             ok[newly] = True
             frontier = newly
         return ok
+
+    def source_chain_nodes(self) -> np.ndarray:
+        """STIC-D extension, 'source chains': (n,) bool mask of indeg-0/
+        outdeg-1 vertices.
+
+        Such a vertex has no in-edges, so its rank is the closed form
+        ``pr(s) = base·bias(s)`` exactly — no head needed.  It starts a chain
+        run (its outdeg-1 successors with indeg 1 are ordinary
+        :meth:`chain_nodes` members, headed by ``s``), and the whole run's
+        contribution to its terminal vertex is a pure bias fold: unlike a
+        headed chain there is no ``pr(head)`` term to carry, so pruning needs
+        no weighted edge at all.  Only meaningful to a plan that can fold
+        biases (:class:`DecompositionPlan` with ``contract=True``)."""
+        indeg = np.diff(self.in_ptr)
+        return (indeg == 0) & (self.out_degree == 1)
 
     def dead_nodes(self) -> np.ndarray:
         """STIC-D 'dead nodes': (n,) bool mask of vertices from which every
@@ -203,7 +267,7 @@ class DecompositionPlan:
     then hand ``plan.core`` to any ``build`` — partitioned, blocked-Pallas,
     distributed — and the solve runs on the smaller problem unchanged.
 
-    Three vertex classes are removed, all exactly (same fixed point):
+    Four vertex classes are removed, all exactly (same fixed point):
 
     * **identical** — non-representative members of an identical-in-neighbour
       class (:meth:`Graph.in_neighbor_classes`) whose out-degree matches the
@@ -212,34 +276,53 @@ class DecompositionPlan:
       contribution) and the member drops out of the core entirely.
     * **chain** — indeg-1/outdeg-1 paths (:meth:`Graph.chain_nodes`): rank is
       a closed form of the head, restored by the reconstruction pass.
+    * **source chain** — indeg-0/outdeg-1 starters
+      (:meth:`Graph.source_chain_nodes`): rank is the closed form
+      ``base·bias`` with no head at all.
     * **dead** — the sink closure (:meth:`Graph.dead_nodes`): rank is
       back-propagated in topological waves once the core has converged.
 
-    Only vertices that cannot influence the core are structurally pruned (the
-    closure drops any chain whose path re-enters the core — a mid-graph chain
-    contraction would need weighted edges, which a plain :class:`Graph`
-    cannot express), so chain pruning covers chains that drain into the dead
-    region; identical rewiring prunes vertices anywhere in the graph.
+    With ``contract=True`` (the default) *every* headed chain is pruned, not
+    just the suffixes that drain into the dead region: a chain
+    ``u→c₁→…→c_k→v`` that re-enters the core at ``v`` is collapsed into one
+    **weighted** core edge ``u→v`` carrying the walk probability of the whole
+    path (``d^k`` for unit-weight edges) while the chain's accumulated
+    teleport contribution (``d+d²+…+d^k`` times the base) is folded into
+    ``v``'s **bias** multiplier.  Source-chain runs fold the same bias term
+    but emit no edge (there is no head whose rank could flow).  Both folds
+    depend on the damping factor, so the plan bakes ``d`` at build time
+    (:attr:`d`); ``repro.core.solver.plan_run`` re-plans when the run-time
+    ``d`` differs.  ``contract=False`` reproduces the PR-3 suffix-only
+    closure (kept for comparison benchmarks/tests).
 
     Dangling redistribution composes in closed form: the redistributed fixed
-    point is the plain fixed point normalised to unit L1 mass (sum both sides
-    of ``pr = (1-d)/n + d·Aᵀpr + (d/n)(1ᵀ_dang pr)`` to see the scalar
-    relation), so the core always solves with ``handle_dangling=False`` and
-    :meth:`reconstruct` normalises at the end.  Likewise the core solve's
-    ``(1-d)/n_core`` base is rescaled by linearity: the full-graph restriction
-    is ``core_pr · n_core / n``.
+    point is a scalar multiple ``c·pr`` of the plain one, with
+    ``c = base/(base − (d/n)·Σ_dangling pr)`` (substitute ``c·pr`` into the
+    redistributed equation to see the relation; on unweighted graphs this is
+    exactly L1 normalisation, and it stays exact when per-edge weights < 1
+    leak mass).  So the core always solves with ``handle_dangling=False``
+    and :meth:`reconstruct` rescales at the end.  The argument needs the
+    full graph's teleport to be *uniform* — the core's chain-folded bias is
+    fine (both fixed points scale the same bias vector), but an explicitly
+    biased input graph is rejected under ``handle_dangling``.  Likewise the
+    core solve's ``(1-d)/n_core`` base is rescaled by linearity: the
+    full-graph restriction is ``core_pr · n_core / n``.
     """
 
     n: int
     core: Graph  # shrunken graph; out_degree holds FULL-graph degrees
     core_index: np.ndarray  # (n_core,) full-graph ids of core vertices
     full_to_core: np.ndarray  # (n,) core slot per vertex, -1 if pruned
-    struct_pruned: np.ndarray  # (n,) bool — chain/dead closure
+    struct_pruned: np.ndarray  # (n,) bool — chain/source-chain/dead prune set
     chain_mask: np.ndarray  # (n,) bool — Graph.chain_nodes() analysis
+    source_mask: np.ndarray  # (n,) bool — Graph.source_chain_nodes() analysis
     dead_mask: np.ndarray  # (n,) bool — Graph.dead_nodes() analysis
     ident_members: np.ndarray  # (k,) full ids pruned by identical rewiring
     ident_reps: np.ndarray  # (k,) their (core) representatives
     full: Graph  # original graph — reconstruction reads its edges
+    d: float  # damping factor baked into contracted weights/bias folds
+    contracted_m: int  # weighted core edges emitted by chain contraction
+    d_dependent: bool = False  # core weights/bias encode d (edges OR folds)
 
     @property
     def pruned(self) -> np.ndarray:
@@ -250,23 +333,35 @@ class DecompositionPlan:
 
     @classmethod
     def from_graph(cls, g: Graph, identical: bool = True, chains: bool = True,
-                   dead: bool = True) -> "DecompositionPlan":
+                   dead: bool = True, contract: bool = True,
+                   d: float = _DEFAULT_DAMPING) -> "DecompositionPlan":
         n = g.n
         chain_mask = g.chain_nodes() if chains else np.zeros(n, dtype=bool)
         dead_mask = g.dead_nodes() if dead else np.zeros(n, dtype=bool)
-        # Structural prune closure: a pruned vertex must not feed a core
-        # vertex, so drop candidates with an out-edge leaving the set until
-        # none remain (the dead set is already closed; chains shrink to the
-        # suffixes that drain into it).
-        s = chain_mask | dead_mask
-        if s.any():
-            escaping = np.unique(g.src[s[g.src] & ~s[g.dst]])
-            while escaping.size:
-                s[escaping] = False
-                # a member with an edge into a just-removed vertex escapes too
-                srcs = np.unique(g.src[_concat_ranges(g.in_ptr, escaping)])
-                escaping = srcs[s[srcs]]
-        struct_pruned = s
+        source_mask = (g.source_chain_nodes() if (chains and contract)
+                       else np.zeros(n, dtype=bool))
+        chainlike = chain_mask | source_mask
+        if contract:
+            # Weighted-core mode: EVERY chainlike vertex is prunable — runs
+            # that re-enter the core are contracted into weighted edges +
+            # bias folds below; runs draining into the dead region are
+            # already inside the (closed) dead set.
+            struct_pruned = chainlike | dead_mask
+        else:
+            # PR-3 suffix-only closure: a pruned vertex must not feed a core
+            # vertex, so drop candidates with an out-edge leaving the set
+            # until none remain (the dead set is already closed; chains
+            # shrink to the suffixes that drain into it).
+            s = chain_mask | dead_mask
+            if s.any():
+                escaping = np.unique(g.src[s[g.src] & ~s[g.dst]])
+                while escaping.size:
+                    s[escaping] = False
+                    # a member with an edge into a just-removed vertex
+                    # escapes too
+                    srcs = np.unique(g.src[_concat_ranges(g.in_ptr, escaping)])
+                    escaping = srcs[s[srcs]]
+            struct_pruned = s
 
         # Identical rewiring: members of an in-neighbour class share the
         # representative's rank; equal out-degree makes the rewired edge
@@ -300,16 +395,91 @@ class DecompositionPlan:
         core_index = np.flatnonzero(~pruned)
         full_to_core[core_index] = np.arange(core_index.size)
 
+        # Mid-graph chain contraction: walk every maximal chainlike run,
+        # carrying the affine closed form pr(c_i) = base·A_i + B_i·pr(u)/od(u)
+        # (A_1 = bias(c_1); B_1 = d·w(u→c_1), or 0 for a source-chain run;
+        # A_{i+1} = bias(c_{i+1}) + d·w_i·A_i; B_{i+1} = d·w_i·B_i).  A run
+        # whose terminal edge c_k→t (weight w_t) lands on a core vertex
+        # contributes base·(d·w_t·A_k) — folded into t's bias — plus
+        # (d·w_t·B_k)·pr(u)/od(u) — the contracted core edge u→t with weight
+        # w_t·B_k.  Runs ending inside the dead region contribute nothing to
+        # the core (their members are all dead themselves).
+        bias_fold = np.zeros(n, dtype=np.float64)
+        extra_src: list[int] = []
+        extra_dst: list[int] = []
+        extra_w: list[float] = []
+        if contract and chainlike.any():
+            w_full = g.weights
+            beta = g.bias
+            out_ptr, out_dst, out_slot = g.out_csr()
+            pred = np.full(n, -1, dtype=np.int64)
+            cidx = np.flatnonzero(chain_mask)
+            pred[cidx] = g.src[g.in_ptr[:-1][cidx]]  # the single in-edge
+            starts = np.flatnonzero(
+                chainlike & (source_mask | ~chainlike[np.maximum(pred, 0)]))
+            for v0 in starts:
+                headless = bool(source_mask[v0])
+                A = 1.0 if beta is None else float(beta[v0])
+                if headless:
+                    B = 0.0
+                else:
+                    w0 = 1.0 if w_full is None else float(w_full[g.in_ptr[v0]])
+                    B = d * w0
+                v = int(v0)
+                while True:
+                    j = out_ptr[v]  # outdeg-1: the single out-edge
+                    succ = int(out_dst[j])
+                    w_out = 1.0 if w_full is None else float(w_full[out_slot[j]])
+                    if chainlike[succ]:
+                        A = (1.0 if beta is None else float(beta[succ])) \
+                            + d * w_out * A
+                        B = d * w_out * B
+                        v = succ
+                        continue
+                    break
+                if struct_pruned[succ]:
+                    continue  # run drains into the dead region
+                # a chain-fed vertex is always a singleton identical class
+                # (its outdeg-1 feeder can appear in no other in-set), so the
+                # terminal is a core vertex, never a pruned identical member
+                assert full_to_core[succ] >= 0, (v0, succ)
+                bias_fold[succ] += d * w_out * A
+                if not headless:
+                    u = int(pred[v0])
+                    hu = int(rewire[u])
+                    assert full_to_core[hu] >= 0, (v0, u, hu)
+                    extra_src.append(hu)
+                    extra_dst.append(succ)
+                    extra_w.append(w_out * B)
+
         if pruned.any():
-            # keep edges into core vertices; rewire identical-member sources.
-            # (a struct-pruned source implies a pruned destination, so every
-            # surviving source maps into the core by construction.)
-            keep = ~pruned[g.dst]
+            # Keep edges between core vertices (rewiring identical-member
+            # sources); edges OUT of the struct-pruned set are dropped — a
+            # chain terminal's edge into the core is replaced by the
+            # contracted weighted edge / bias fold built above.
+            keep = ~pruned[g.dst] & ~struct_pruned[g.src]
             src2 = rewire[g.src[keep]]
+            csrc = full_to_core[src2]
+            cdst = full_to_core[g.dst[keep]]
+            weights: Optional[np.ndarray] = None
+            if g.weights is not None or extra_w:
+                kept_w = (g.weights[keep] if g.weights is not None
+                          else np.ones(csrc.size, dtype=np.float64))
+                weights = np.r_[kept_w, np.asarray(extra_w, dtype=np.float64)]
+            if extra_src:
+                csrc = np.r_[csrc, full_to_core[np.asarray(extra_src)]]
+                cdst = np.r_[cdst, full_to_core[np.asarray(extra_dst)]]
+            core_bias: Optional[np.ndarray] = None
+            if g.bias is not None or bias_fold.any():
+                core_bias = (g.bias[core_index].copy() if g.bias is not None
+                             else np.ones(core_index.size, dtype=np.float64))
+                core_bias += bias_fold[core_index]
             core = Graph.from_edges(
                 int(core_index.size),
-                full_to_core[src2].astype(np.int32),
-                full_to_core[g.dst[keep]].astype(np.int32),
+                csrc.astype(np.int32),
+                cdst.astype(np.int32),
+                weights=weights,
+                bias=core_bias,
             )
             # contributions divide by the FULL graph's out-degree: a core
             # vertex keeps leaking mass to its pruned out-neighbours.
@@ -319,15 +489,25 @@ class DecompositionPlan:
         return cls(
             n=n, core=core, core_index=core_index, full_to_core=full_to_core,
             struct_pruned=struct_pruned, chain_mask=chain_mask,
-            dead_mask=dead_mask, ident_members=ident_members_a,
-            ident_reps=ident_reps_a, full=g,
+            source_mask=source_mask, dead_mask=dead_mask,
+            ident_members=ident_members_a, ident_reps=ident_reps_a, full=g,
+            d=float(d), contracted_m=len(extra_w),
+            d_dependent=bool(extra_w) or bool(bias_fold.any()),
         )
 
     def stats(self) -> dict:
-        """Preprocessing payoff counters (recorded by ``bench_variants``)."""
+        """Preprocessing payoff counters (printed by the launcher, recorded
+        by ``bench_variants --json``).  Vertex counts split by analysis
+        (``pruned_chain`` covers headed *and* source chains); edge counters
+        record how much per-iteration edge work the plan removed:
+        ``pruned_edges`` is the number of full-graph edges absent from the
+        core, ``contracted_edges`` the weighted edges chain contraction
+        added in their place (``core_m = full_m - pruned_edges +
+        contracted_edges``)."""
         n_ident = int(self.ident_members.size)
-        chain = int((self.struct_pruned & self.chain_mask).sum())
-        dead = int((self.struct_pruned & ~self.chain_mask).sum())
+        chainlike = self.chain_mask | self.source_mask
+        chain = int((self.struct_pruned & chainlike).sum())
+        dead = int((self.struct_pruned & ~chainlike).sum())
         return {
             "full_n": self.n,
             "full_m": self.full.m,
@@ -336,6 +516,8 @@ class DecompositionPlan:
             "pruned_identical": n_ident,
             "pruned_chain": chain,
             "pruned_dead": dead,
+            "pruned_edges": self.full.m + self.contracted_m - self.core.m,
+            "contracted_edges": self.contracted_m,
         }
 
     def reconstruct(self, core_pr, d: float = 0.85,
@@ -347,11 +529,25 @@ class DecompositionPlan:
         to the full-graph base by linearity, copy identical members from
         their representatives, back-propagate chain/dead ranks in topological
         waves (each wave computes every pruned vertex whose in-neighbours are
-        all known), and finally — iff ``handle_dangling`` — normalise to unit
-        mass, which *is* the redistributed fixed point in closed form.
+        all known — contracted chain interiors reconstruct here too, wave by
+        wave down each chain), and finally — iff ``handle_dangling`` —
+        rescale by the closed-form redistribution factor
+        ``base/(base − (d/n)·Σ_dangling pr)`` (plain L1 normalisation on
+        unweighted graphs, still exact on weighted ones).
         """
         g = self.full
         n = self.n
+        if self.d_dependent and not np.isclose(d, self.d):
+            raise ValueError(
+                f"plan was contracted for d={self.d} but reconstruct got "
+                f"d={d}; re-plan with DecompositionPlan.from_graph(..., d={d})"
+            )
+        if handle_dangling and g.bias is not None:
+            raise ValueError(
+                "closed-form dangling redistribution (L1 normalisation) "
+                "requires a uniform full-graph teleport; solve the biased "
+                "graph with handle_dangling=False"
+            )
         pr = np.zeros(n, dtype=np.float64)
         if n == 0:
             return pr
@@ -365,6 +561,8 @@ class DecompositionPlan:
         pr[self.ident_members] = pr[self.ident_reps]
 
         inv_out, _ = inv_out_and_dangling(g.out_degree)
+        w_full = g.weights  # reconstruction honours weighted input graphs
+        beta = g.bias
         base = (1.0 - d) / n
         # Kahn topological pass: unknown_in counts in-edges from not-yet-
         # computed (struct-pruned) sources; a vertex is ready at zero, and
@@ -380,9 +578,12 @@ class DecompositionPlan:
             srcs = g.src[idx]
             lens = g.in_ptr[ready + 1] - g.in_ptr[ready]
             seg = np.repeat(np.arange(ready.size), lens)
-            acc = np.bincount(seg, weights=pr[srcs] * inv_out[srcs],
-                              minlength=ready.size)
-            pr[ready] = base + d * acc
+            vals = pr[srcs] * inv_out[srcs]
+            if w_full is not None:
+                vals = vals * w_full[idx]
+            acc = np.bincount(seg, weights=vals, minlength=ready.size)
+            pr[ready] = base * (beta[ready] if beta is not None else 1.0) \
+                + d * acc
             done[ready] = True
             n_done += ready.size
             succ = out_dst[_concat_ranges(out_ptr, ready)]
@@ -396,9 +597,16 @@ class DecompositionPlan:
                 "cycle (chain_nodes/dead_nodes invariant violated)"
             )
         if handle_dangling:
-            total = pr.sum()
-            if total > 0:
-                pr = pr / total
+            # Closed-form redistribution: the redistributed fixed point is
+            # q = c·pr with c = base/(base − (d/n)·Σ_dangling pr) — substitute
+            # q = c·pr into q = base·1 + d·W·q + (d/n)(Σ_dang q)·1 to see c.
+            # On unweighted graphs c = 1/‖pr‖₁ (unit redistributed mass), but
+            # the scalar form also stays exact when per-edge weights < 1 leak
+            # mass, where plain L1 normalisation would not.
+            dang_mass = pr[g.out_degree == 0].sum()
+            denom = base - (d / n) * dang_mass
+            if denom > 0:
+                pr = pr * (base / denom)
         return pr
 
 
@@ -411,6 +619,11 @@ class BlockedCOO:
     so the kernel only addresses one VMEM-resident slice of the rank vector
     and one dst-block accumulator.  Invalid (padding) lanes point at slot 0
     with weight 0.
+
+    ``tiles_weight`` carries per-edge weights in the same tile layout (0 on
+    padding lanes) when the source graph is weighted, and is ``None``
+    otherwise — the kernels then reuse ``tiles_valid`` as the weight operand,
+    so the unweighted path streams no extra VMEM bytes.
     """
 
     n: int
@@ -421,6 +634,7 @@ class BlockedCOO:
     tiles_valid: np.ndarray  # (T, cap) float32 {0,1}
     tile_src_block: np.ndarray  # (T,) int32
     tile_dst_block: np.ndarray  # (T,) int32
+    tiles_weight: Optional[np.ndarray] = None  # (T, cap) float32, 0 = padding
 
     @property
     def num_tiles(self) -> int:
@@ -429,6 +643,7 @@ class BlockedCOO:
 
 def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> BlockedCOO:
     n_blocks = -(-g.n // block)
+    weighted = g.weights is not None
     if n_blocks == 0:  # empty graph: no vertices, no tiles
         empty = np.zeros((0, tile_cap), dtype=np.int32)
         return BlockedCOO(
@@ -437,14 +652,17 @@ def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> Block
             tiles_valid=np.zeros((0, tile_cap), dtype=np.float32),
             tile_src_block=np.zeros((0,), dtype=np.int32),
             tile_dst_block=np.zeros((0,), dtype=np.int32),
+            tiles_weight=(np.zeros((0, tile_cap), dtype=np.float32)
+                          if weighted else None),
         )
     sb = g.src // block
     db = g.dst // block
     bucket = db.astype(np.int64) * n_blocks + sb
     order = np.argsort(bucket, kind="stable")
     src_s, dst_s, bucket_s = g.src[order], g.dst[order], bucket[order]
+    w_s = g.weights[order].astype(np.float32) if weighted else None
 
-    tiles_src, tiles_dst, tiles_val, t_sb, t_db = [], [], [], [], []
+    tiles_src, tiles_dst, tiles_val, tiles_wt, t_sb, t_db = [], [], [], [], [], []
     if bucket_s.size:
         starts = np.flatnonzero(np.r_[True, bucket_s[1:] != bucket_s[:-1]])
     else:  # zero-edge graph: no buckets, only the coverage tiles below
@@ -465,6 +683,10 @@ def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> Block
             tiles_src.append(sl)
             tiles_dst.append(dl)
             tiles_val.append(vl)
+            if weighted:
+                wl = np.zeros(tile_cap, dtype=np.float32)
+                wl[:k] = w_s[ts:te]
+                tiles_wt.append(wl)
             t_sb.append(sblk)
             t_db.append(dblk)
 
@@ -475,6 +697,8 @@ def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> Block
             tiles_src.append(np.zeros(tile_cap, np.int32))
             tiles_dst.append(np.zeros(tile_cap, np.int32))
             tiles_val.append(np.zeros(tile_cap, np.float32))
+            if weighted:
+                tiles_wt.append(np.zeros(tile_cap, np.float32))
             t_sb.append(0)
             t_db.append(dblk)
 
@@ -483,6 +707,8 @@ def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> Block
     tiles_src = [tiles_src[i] for i in order2]
     tiles_dst = [tiles_dst[i] for i in order2]
     tiles_val = [tiles_val[i] for i in order2]
+    if weighted:
+        tiles_wt = [tiles_wt[i] for i in order2]
     t_sb = [t_sb[i] for i in order2]
     t_db = [t_db[i] for i in order2]
 
@@ -495,4 +721,5 @@ def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> Block
         tiles_valid=np.stack(tiles_val),
         tile_src_block=np.asarray(t_sb, dtype=np.int32),
         tile_dst_block=np.asarray(t_db, dtype=np.int32),
+        tiles_weight=np.stack(tiles_wt) if weighted else None,
     )

@@ -116,16 +116,19 @@ def spmv_blocked(
 # map → one VMEM-resident buffer across the whole grid, written back once at
 # the end).  Step 0 copies the input ranks in; each dst-block run accumulates
 # its tiles' one-hot-matmul partial sums into a VMEM scratch, then commits
-# ``new_j = (base_eff + d·acc)·vmask_j`` into the state, so later runs gather
-# from it.  ``base_eff`` folds (1-d)/n plus the pass's dangling mass; both
-# scalars arrive via a tiny params block.  This keeps the full rank vector
-# VMEM-resident (n_blocks·block·4B), which is the right trade below ~1M
-# vertices per core; beyond that the nosync schedule shards first (see
-# core/distributed.py).
+# ``new_j = (base·bias_j + dmass + d·acc)·vmask_j`` into the state, so later
+# runs gather from it.  The three scalars [base, d, dmass] arrive via a tiny
+# params block (dangling mass kept separate from the base: redistribution is
+# uniform, never bias-scaled); per-edge weights stream per tile and the bias
+# is one more block-layout VMEM operand — see docs/KERNELS.md for the operand
+# table and the resulting ~24 B/vertex VMEM budget (whole-state residency is
+# the right trade below ~600-700k vertices per core; beyond that the nosync
+# schedule shards first, see core/distributed.py).
 
 
 def _spmv_gs_kernel(sb_ref, db_ref, params_ref, pr0_ref, inv_ref, vmask_ref,
-                    frozen_ref, src_ref, dst_ref, val_ref, pr_ref, acc_ref):
+                    bias_ref, frozen_ref, src_ref, dst_ref, val_ref, wt_ref,
+                    pr_ref, acc_ref):
     t = pl.program_id(0)
     num_t = pl.num_programs(0)
     db = db_ref[t]
@@ -144,23 +147,31 @@ def _spmv_gs_kernel(sb_ref, db_ref, params_ref, pr0_ref, inv_ref, vmask_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # Fresh gather: contributions come from the current state, not a snapshot.
+    # The per-edge weights operand scales each lane of the one-hot contraction
+    # (val·wt folds validity and weight; the unweighted caller passes the
+    # {0,1} validity mask for wt, making the product a no-op).
     contrib = (pl.load(pr_ref, (pl.ds(sb, 1), slice(None))) *
                pl.load(inv_ref, (pl.ds(sb, 1), slice(None))))[0, :]
     acc_ref[0, :] += _tile_gather_scatter(src_ref[0, :], dst_ref[0, :],
-                                          val_ref[0, :], contrib)
+                                          val_ref[0, :] * wt_ref[0, :], contrib)
 
     @pl.when(is_run_end)
     def _commit_block():
-        base_eff = params_ref[0, 0]
+        base = params_ref[0, 0]
         d = params_ref[0, 1]
+        dmass = params_ref[0, 2]
         vm = pl.load(vmask_ref, (pl.ds(db, 1), slice(None)))[0, :]
+        # per-vertex teleport bias: multiplies the base term only (dangling
+        # mass stays uniform); the unbiased caller passes vmask, whose 1s at
+        # real vertices reproduce the scalar base exactly.
+        bz = pl.load(bias_ref, (pl.ds(db, 1), slice(None)))[0, :]
         # perforation (Alg 5): frozen vertices keep their current rank, so
         # in-pass fresh reads by later dst blocks observe the frozen value.
         # The freeze mask is decided OUTSIDE the kernel (the engine's
         # perforation transform); here it is only respected.
         fz = pl.load(frozen_ref, (pl.ds(db, 1), slice(None)))[0, :]
         old = pl.load(pr_ref, (pl.ds(db, 1), slice(None)))[0, :]
-        new = (base_eff + d * acc_ref[0, :]) * vm
+        new = (base * bz + dmass + d * acc_ref[0, :]) * vm
         new = fz * old + (1.0 - fz) * new
         pl.store(pr_ref, (pl.ds(db, 1), slice(None)),
                  new[None, :].astype(pr_ref.dtype))
@@ -171,11 +182,13 @@ def spmv_gs_pass(
     pr_blocks: jax.Array,  # (n_blocks, block) f32 — current ranks, padded
     inv_out_blocks: jax.Array,  # (n_blocks, block) f32 — 1/outdeg, padded
     vmask_blocks: jax.Array,  # (n_blocks, block) f32 — 1 for real vertices
+    bias_blocks: jax.Array,  # (n_blocks, block) f32 — teleport-bias multiplier
     frozen_blocks: jax.Array,  # (n_blocks, block) f32 — 1 for perforation-frozen
-    params: jax.Array,  # (1, 2) f32 — [base_eff, d]
+    params: jax.Array,  # (1, 3) f32 — [base, d, dmass]
     tiles_src_local: jax.Array,  # (T, cap) int32
     tiles_dst_local: jax.Array,  # (T, cap) int32
     tiles_valid: jax.Array,  # (T, cap) f32
+    tiles_weight: jax.Array,  # (T, cap) f32 — per-edge weights (0 = padding)
     tile_src_block: jax.Array,  # (T,) int32 — tiles sorted by dst_block
     tile_dst_block: jax.Array,  # (T,) int32 — non-decreasing
     *,
@@ -188,7 +201,17 @@ def spmv_gs_pass(
     vertex's rank is held at its current value when its dst block commits
     (pass all-zeros for the unperforated schedule — the mask costs one
     VMEM-resident ``(n_blocks, block)`` operand, same footprint as
-    ``vmask_blocks``)."""
+    ``vmask_blocks``).
+
+    ``tiles_weight`` is the per-edge weights VMEM operand (tile layout, one
+    ``(1, cap)`` slice streamed per grid step alongside the index tiles); it
+    scales each edge's gathered contribution inside the one-hot tile matmul.
+    ``bias_blocks`` is the per-vertex teleport-bias operand multiplying the
+    ``base`` scalar at commit; ``params`` carries ``[base, d, dmass]`` with
+    the dangling mass kept separate because redistribution is uniform, never
+    bias-scaled.  Unweighted callers pass ``tiles_valid`` / ``vmask_blocks``
+    for the two (aliasing the buffers already resident — no extra HBM
+    traffic, and ``val·val = val`` for a {0,1} mask)."""
     n_blocks = pr_blocks.shape[0]
     T, cap = tiles_src_local.shape
 
@@ -196,11 +219,13 @@ def spmv_gs_pass(
         num_scalar_prefetch=2,
         grid=(T,),
         in_specs=[
-            pl.BlockSpec((1, 2), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((1, 3), lambda t, sb, db: (0, 0)),
             pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
             pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
             pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
             pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((n_blocks, block), lambda t, sb, db: (0, 0)),
+            pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
             pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
             pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
             pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
@@ -214,8 +239,8 @@ def spmv_gs_pass(
         out_shape=jax.ShapeDtypeStruct((n_blocks, block), pr_blocks.dtype),
         interpret=interpret,
     )(tile_src_block, tile_dst_block, params, pr_blocks, inv_out_blocks,
-      vmask_blocks, frozen_blocks, tiles_src_local, tiles_dst_local,
-      tiles_valid)
+      vmask_blocks, bias_blocks, frozen_blocks, tiles_src_local,
+      tiles_dst_local, tiles_valid, tiles_weight)
 
 
 # ---------------------------------------------------------------------------
@@ -247,7 +272,7 @@ def spmv_gs_pass(
 
 def _spmv_gs_multi_kernel(sb_ref, db_ref, params_ref, pr0_ref, inv_ref,
                           vmask_ref, frozen_ref, base_ref, src_ref, dst_ref,
-                          val_ref, pr_ref, acc_ref):
+                          val_ref, wt_ref, pr_ref, acc_ref):
     t = pl.program_id(0)
     num_t = pl.num_programs(0)
     db = db_ref[t]
@@ -274,7 +299,9 @@ def _spmv_gs_multi_kernel(sb_ref, db_ref, params_ref, pr0_ref, inv_ref,
     onehot_src = (src_ref[0, :][:, None] == ids).astype(jnp.float32)
     gathered = jnp.dot(onehot_src, contrib.T,
                        preferred_element_type=jnp.float32)  # (cap, b)
-    vals = gathered * val_ref[0, :][:, None]
+    # validity·weight folds the per-edge weights operand into the panel
+    # (unweighted callers pass tiles_valid as wt: val² = val for a {0,1} mask)
+    vals = gathered * (val_ref[0, :] * wt_ref[0, :])[:, None]
     onehot_dst = (dst_ref[0, :][:, None] == ids).astype(jnp.float32)
     acc_ref[...] += jnp.dot(vals.T, onehot_dst,
                             preferred_element_type=jnp.float32)  # (b, block)
@@ -303,6 +330,7 @@ def spmv_gs_pass_multi(
     tiles_src_local: jax.Array,  # (T, cap) int32
     tiles_dst_local: jax.Array,  # (T, cap) int32
     tiles_valid: jax.Array,  # (T, cap) f32
+    tiles_weight: jax.Array,  # (T, cap) f32 — per-edge weights (0 = padding)
     tile_src_block: jax.Array,  # (T,) int32 — tiles sorted by dst_block
     tile_dst_block: jax.Array,  # (T,) int32 — non-decreasing
     *,
@@ -315,9 +343,14 @@ def spmv_gs_pass_multi(
     ``base_blocks`` is the per-row additive term in the same layout as the
     rank state — ``teleport·((1-d) + d·dangling_mass_row)`` for PPR, which
     reduces to the global kernel's scalar base when every row's teleport is
-    uniform.  ``frozen_rows`` freezes whole rows (serving slots), not single
-    vertices; with ``b=1``, all-zeros mask and a uniform base this pass is
-    exactly :func:`spmv_gs_pass` on one vector."""
+    uniform (per-vertex bias also folds in here: the caller scales the
+    teleport rows, so this kernel needs no separate bias operand).
+    ``tiles_weight`` is the per-edge weights VMEM operand shared across the
+    whole batch — one ``(1, cap)`` stream per tile scales the ``(cap, b)``
+    gathered panel; unweighted callers pass ``tiles_valid``.  ``frozen_rows``
+    freezes whole rows (serving slots), not single vertices; with ``b=1``,
+    all-zeros mask and a uniform base this pass is exactly
+    :func:`spmv_gs_pass` on one vector."""
     n_blocks, b, _ = pr_blocks.shape
     T, cap = tiles_src_local.shape
 
@@ -334,6 +367,7 @@ def spmv_gs_pass_multi(
             pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
             pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
             pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
+            pl.BlockSpec((1, cap), lambda t, sb, db: (t, 0)),
         ],
         out_specs=pl.BlockSpec((n_blocks, b, block), lambda t, sb, db: (0, 0, 0)),
         scratch_shapes=[pltpu.VMEM((b, block), jnp.float32)],
@@ -345,4 +379,4 @@ def spmv_gs_pass_multi(
         interpret=interpret,
     )(tile_src_block, tile_dst_block, params, pr_blocks, inv_out_blocks,
       vmask_blocks, frozen_rows, base_blocks, tiles_src_local,
-      tiles_dst_local, tiles_valid)
+      tiles_dst_local, tiles_valid, tiles_weight)

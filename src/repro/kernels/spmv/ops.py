@@ -42,7 +42,11 @@ SCHEDULES = ("barrier", "nosync")
 
 
 class PallasGraph(NamedTuple):
-    """Device-side bundle for the Pallas PageRank path."""
+    """Device-side bundle for the Pallas PageRank path.
+
+    ``tiles_weight``/``bias_blocks`` are ``None`` on unweighted/unbiased
+    graphs — the sweeps then hand the kernels ``tiles_valid``/``vmask`` in
+    their place (same buffers, so the fast path streams no extra bytes)."""
 
     n: int
     block: int
@@ -54,6 +58,8 @@ class PallasGraph(NamedTuple):
     tile_dst_block: jax.Array
     inv_out_blocks: jax.Array  # (n_blocks, block)
     dangling_blocks: jax.Array  # (n_blocks, block) — outdeg==0 mask, padded 0
+    tiles_weight: jax.Array | None = None  # (T, cap) per-edge weights
+    bias_blocks: jax.Array | None = None  # (n_blocks, block) base multiplier
 
     @classmethod
     def build(cls, g: Graph, block: int = 256, tile_cap: int = 1024) -> "PallasGraph":
@@ -62,6 +68,11 @@ class PallasGraph(NamedTuple):
         inv, dang = inv_out_and_dangling(g.out_degree, n_pad)
         inv = inv.astype(np.float32)
         dang = dang.astype(np.float32)
+        bias_blocks = None
+        if g.bias is not None:
+            bias = np.zeros(n_pad, dtype=np.float32)
+            bias[:g.n] = g.bias
+            bias_blocks = jnp.asarray(bias.reshape(b.n_blocks, block))
         return cls(
             n=g.n,
             block=block,
@@ -73,6 +84,9 @@ class PallasGraph(NamedTuple):
             tile_dst_block=jnp.asarray(b.tile_dst_block),
             inv_out_blocks=jnp.asarray(inv.reshape(b.n_blocks, block)),
             dangling_blocks=jnp.asarray(dang.reshape(b.n_blocks, block)),
+            tiles_weight=(None if b.tiles_weight is None
+                          else jnp.asarray(b.tiles_weight)),
+            bias_blocks=bias_blocks,
         )
 
 
@@ -83,7 +97,7 @@ class PallasGraph(NamedTuple):
 )
 def _pallas_impl(
     tiles_src_local, tiles_dst_local, tiles_valid, tile_src_block,
-    tile_dst_block, inv_out_blocks, dangling_blocks,
+    tile_dst_block, inv_out_blocks, dangling_blocks, tiles_weight, bias_blocks,
     *, n, block, n_blocks, d, threshold, max_iter, schedule, handle_dangling,
     interpret, perforate,
 ):
@@ -91,6 +105,10 @@ def _pallas_impl(
     base = (1.0 - d) / n
     # padding vertices have no in-edges: keep their rank at 0 via a mask
     vmask = (jnp.arange(n_pad) < n).astype(jnp.float32).reshape(n_blocks, block)
+    # unweighted/unbiased fast path: reuse the already-resident operands
+    # (validity doubles as weight: val·val = val; vmask doubles as bias)
+    wt = tiles_valid if tiles_weight is None else tiles_weight
+    bz = vmask if bias_blocks is None else bias_blocks
 
     def dangling_mass(pr):
         if not handle_dangling:
@@ -101,27 +119,30 @@ def _pallas_impl(
 
         def sweep(pr):
             contrib = pr * inv_out_blocks
+            # the weights operand rides in the valid slot: spmv_blocked's
+            # tile math multiplies one (cap,) factor per lane either way
             acc = spmv_blocked(
-                contrib, tiles_src_local, tiles_dst_local, tiles_valid,
+                contrib, tiles_src_local, tiles_dst_local, wt,
                 tile_src_block, tile_dst_block, block=block, interpret=interpret,
             )
-            return (base + d * acc + d * dangling_mass(pr)) * vmask
+            return (base * bz + d * acc + d * dangling_mass(pr)) * vmask
 
     else:  # nosync: one blocked Gauss–Seidel pass per engine iteration
 
         def sweep(pr, frozen=None):
             params = jnp.stack(
-                [jnp.asarray(base + d * dangling_mass(pr), jnp.float32),
-                 jnp.asarray(d, jnp.float32)]
-            ).reshape(1, 2)
+                [jnp.asarray(base, jnp.float32),
+                 jnp.asarray(d, jnp.float32),
+                 jnp.asarray(d * dangling_mass(pr), jnp.float32)]
+            ).reshape(1, 3)
             # freeze mask as an extra VMEM operand: frozen vertices hold
             # their rank through the pass, so in-pass fresh reads stay
             # consistent with the engine transform's post-pass revert
             frz = (jnp.zeros_like(vmask) if frozen is None
                    else frozen.astype(jnp.float32))
             return spmv_gs_pass(
-                pr, inv_out_blocks, vmask, frz, params,
-                tiles_src_local, tiles_dst_local, tiles_valid,
+                pr, inv_out_blocks, vmask, bz, frz, params,
+                tiles_src_local, tiles_dst_local, tiles_valid, wt,
                 tile_src_block, tile_dst_block, block=block, interpret=interpret,
             )
 
@@ -158,7 +179,7 @@ def pagerank_pallas(
     return _pallas_impl(
         pg.tiles_src_local, pg.tiles_dst_local, pg.tiles_valid,
         pg.tile_src_block, pg.tile_dst_block, pg.inv_out_blocks,
-        pg.dangling_blocks,
+        pg.dangling_blocks, pg.tiles_weight, pg.bias_blocks,
         n=pg.n, block=pg.block, n_blocks=pg.n_blocks,
         d=d, threshold=threshold, max_iter=max_iter, schedule=schedule,
         handle_dangling=handle_dangling, interpret=interpret,

@@ -14,11 +14,13 @@ def spmv_ref(contrib: jax.Array, src: jax.Array, dst: jax.Array, n: int) -> jax.
 
 def spmv_blocked_ref(contrib_blocks: jax.Array, b: BlockedCOO) -> jax.Array:
     """Same tile semantics as the kernel, expressed with plain segment sums —
-    used to check the blocked layout itself is a faithful edge permutation."""
+    used to check the blocked layout itself is a faithful edge permutation
+    (weight-scaled per edge when the layout carries ``tiles_weight``)."""
     n_blocks, block = contrib_blocks.shape
     flat = contrib_blocks.reshape(-1)
     src_glob = jnp.asarray(b.tile_src_block)[:, None] * block + jnp.asarray(b.tiles_src_local)
     dst_glob = jnp.asarray(b.tile_dst_block)[:, None] * block + jnp.asarray(b.tiles_dst_local)
-    vals = flat[src_glob.reshape(-1)] * jnp.asarray(b.tiles_valid).reshape(-1)
+    lane_w = b.tiles_valid if b.tiles_weight is None else b.tiles_weight
+    vals = flat[src_glob.reshape(-1)] * jnp.asarray(lane_w).reshape(-1)
     acc = jax.ops.segment_sum(vals, dst_glob.reshape(-1), num_segments=n_blocks * block)
     return acc.reshape(n_blocks, block)

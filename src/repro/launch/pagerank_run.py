@@ -140,7 +140,14 @@ def main(argv=None) -> int:
     ap.add_argument("--handle-dangling", action="store_true",
                     help="redistribute dangling mass uniformly (all variants)")
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--list", action="store_true", help="list variants and exit")
+    ap.add_argument("--list", action="store_true",
+                    help="list every registered variant and exit; columns are "
+                         "the registry metadata triple the generic drivers "
+                         "dispatch on — layout (bundle-sharing key: variants "
+                         "with the same layout share one build), backend "
+                         "(numpy | jax | pallas | shard_map; pallas runs "
+                         "interpreted off-TPU), schedule (barrier | nosync | "
+                         "sequential: the cost-model discipline)")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -174,7 +181,9 @@ def main(argv=None) -> int:
     if ps:
         print(f"plan: core n={ps['core_n']} m={ps['core_m']} "
               f"(pruned identical={ps['pruned_identical']} "
-              f"chain={ps['pruned_chain']} dead={ps['pruned_dead']})")
+              f"chain={ps['pruned_chain']} dead={ps['pruned_dead']}; "
+              f"edges pruned={ps['pruned_edges']} "
+              f"contracted={ps['contracted_edges']})")
     r = v.run(bundle, threshold=args.threshold,
               handle_dangling=args.handle_dangling, **opts)
     pr, iters, err = np.asarray(r.pr), int(r.iterations), float(r.err)

@@ -12,6 +12,11 @@ Three pillars on top of the global-PageRank engine:
   answers and an a-priori L1 error bound.
 * :mod:`repro.serving.ppr_engine` — the continuous-batching PPR query engine
   serving seed queries from a fixed device-resident batch.
+
+All three pillars honour weighted/biased graphs (``Graph.weights`` /
+``Graph.bias``): per-edge weights scale every pushed or swept contribution,
+and a per-vertex bias scales the teleport rows (``t_eff = t·bias``) — see
+:mod:`repro.ppr.batched` for the convention and its dangling caveat.
 """
 from repro.ppr.batched import (
     normalize_seeds,

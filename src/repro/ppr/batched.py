@@ -21,6 +21,16 @@ a random walk restarts with), which keeps the fixed point linear in ``t``:
 with a uniform teleport row every batched variant reproduces the global
 ``handle_dangling`` fixed point exactly — that linearity is the subsystem's
 acceptance test.
+
+Weighted/biased graphs (the STIC-D contraction's representation — see
+``repro.graphs.csr.Graph``) are honoured throughout: per-edge weights scale
+each contribution inside every batched sweep, and a per-vertex bias scales
+the teleport rows themselves (``t_eff = t·bias``), so a uniform-teleport row
+on a biased graph reproduces the global biased solve.  Note the dangling
+convention difference: PPR re-teleports dangling mass onto the (biased)
+teleport row, while the global solvers redistribute it uniformly — the two
+fixed points coincide on unbiased graphs only, which is what the round-trip
+tests assert.
 """
 from __future__ import annotations
 
@@ -120,10 +130,16 @@ def ppr_numpy(
     """Batched float64 PPR oracle; returns ``(pr (b, n), iterations)``.
 
     With a uniform teleport row this IS :func:`pagerank_numpy` (teleport
-    linearity) — the PPR test tier asserts the round-trip at L1 < 1e-6."""
+    linearity) — the PPR test tier asserts the round-trip at L1 < 1e-6.
+    Per-edge ``g.weights`` scale each contribution; ``g.bias`` scales the
+    teleport rows (``t_eff = t·bias``, the convention every device variant
+    applies at teleport-build time), so the uniform-row identity extends to
+    weighted/biased graphs (without dangling — see the module docstring)."""
     t = np.asarray(teleport, dtype=np.float64)
     b, n = t.shape
     assert n == g.n, f"teleport width {n} != graph n {g.n}"
+    if g.bias is not None:
+        t = t * g.bias[None, :]
     inv_out = np.where(g.out_degree > 0, 1.0 / np.maximum(g.out_degree, 1), 0.0)
     dang = (g.out_degree == 0).astype(np.float64)
     pr = t.copy()
@@ -131,7 +147,10 @@ def ppr_numpy(
     for it in range(1, max_iter + 1):
         contrib = pr * inv_out[None, :]
         acc = np.zeros((b, n))
-        np.add.at(acc, (rows, g.dst[None, :]), contrib[:, g.src])
+        vals = contrib[:, g.src]
+        if g.weights is not None:
+            vals = vals * g.weights[None, :]
+        np.add.at(acc, (rows, g.dst[None, :]), vals)
         new = (1.0 - d) * t + d * acc
         if handle_dangling:
             new += d * (pr @ dang)[:, None] * t
@@ -147,14 +166,20 @@ def ppr_numpy(
 # ---------------------------------------------------------------------------
 
 
-def make_batched_sweep(src, dst, inv_out, dangling, *, n: int, d: float,
-                       handle_dangling: bool):
+def make_batched_sweep(src, dst, inv_out, dangling, weights=None, *, n: int,
+                       d: float, handle_dangling: bool):
     """``sweep(pr (b,n), tele (b,n)) -> (b,n)`` — one batched Eq.-(1)
     application.  Shared by :func:`ppr_barrier` and the serving engine's
-    jitted step (which drives it outside the engine's while_loop)."""
+    jitted step (which drives it outside the engine's while_loop).
+
+    ``weights`` (dst-sorted per-edge, or ``None``) scales each contribution;
+    a vertex bias is NOT applied here — callers fold it into the teleport
+    rows (``t_eff = t·bias``) before the sweep ever runs."""
 
     def sweep(pr, tele):
         contrib = (pr * inv_out[None, :])[:, src]  # (b, m)
+        if weights is not None:
+            contrib = contrib * weights[None, :]
         acc = jax.ops.segment_sum(
             contrib.T, dst, num_segments=n, indices_are_sorted=True).T
         new = (1.0 - d) * tele + d * acc
@@ -166,12 +191,27 @@ def make_batched_sweep(src, dst, inv_out, dangling, *, n: int, d: float,
     return sweep
 
 
+def bias_scaled(tele: np.ndarray, bias) -> np.ndarray:
+    """Fold a per-vertex bias into teleport rows (``t_eff = t·bias``) —
+    the ONE place the PPR subsystem applies :attr:`Graph.bias` (the batched
+    solvers, the push solver, and the serving engine all route through it),
+    so every backend shares the convention.  ``tele`` may be a ``(b, n_pad)``
+    matrix or a single ``(n_pad,)`` row; ``bias`` may be shorter than the
+    padded teleport width (padding columns carry no bias)."""
+    if bias is None:
+        return tele
+    b = np.asarray(bias, dtype=tele.dtype)
+    out = tele.copy()
+    out[..., :b.shape[-1]] *= b
+    return out
+
+
 @functools.partial(
     jax.jit, static_argnames=("n", "max_iter", "handle_dangling")
 )
-def _ppr_barrier_impl(src, dst, inv_out, dangling, tele,
+def _ppr_barrier_impl(src, dst, inv_out, dangling, weights, tele,
                       *, n, d, threshold, max_iter, handle_dangling):
-    sweep = make_batched_sweep(src, dst, inv_out, dangling, n=n, d=d,
+    sweep = make_batched_sweep(src, dst, inv_out, dangling, weights, n=n, d=d,
                                handle_dangling=handle_dangling)
     b = tele.shape[0]
     step = batched_barrier_schedule(
@@ -189,9 +229,10 @@ def ppr_barrier(
     handle_dangling: bool = False,
 ) -> PageRankResult:
     """Batched multi-seed PPR on the barrier schedule; ``pr`` is ``(b, n)``."""
-    tele = jnp.asarray(np.asarray(teleport), dtype=dg.inv_out.dtype)
+    tele_np = bias_scaled(np.asarray(teleport, dtype=np.float64), dg.bias)
+    tele = jnp.asarray(tele_np, dtype=dg.inv_out.dtype)
     return _ppr_barrier_impl(
-        dg.src, dg.dst, dg.inv_out, dg.dangling, tele,
+        dg.src, dg.dst, dg.inv_out, dg.dangling, dg.weights, tele,
         n=dg.n, d=d, threshold=threshold, max_iter=max_iter,
         handle_dangling=handle_dangling,
     )
@@ -214,7 +255,9 @@ def _ppr_nosync_impl(
     dtype = inv_out.dtype
 
     def sweep(i, pr, dmass):
-        # dmass: (b, 1) per-row dangling snapshot from the prologue
+        # dmass: (b, 1) per-row dangling snapshot from the prologue.
+        # `emask` is the bundle's edge_mult: {0,1} validity on unweighted
+        # graphs, per-edge weights (0 on padding) on weighted ones.
         srcs = jax.lax.dynamic_slice_in_dim(src_pad, i, 1, 0)[0]
         dsts = jax.lax.dynamic_slice_in_dim(dst_local, i, 1, 0)[0]
         msk = jax.lax.dynamic_slice_in_dim(emask, i, 1, 0)[0]
@@ -246,10 +289,11 @@ def ppr_nosync(
 ) -> PageRankResult:
     """Batched PPR on the Alg-3 no-sync schedule (partitions on the last
     axis, each sweep reading every row's freshest ranks)."""
-    tele = jnp.asarray(
-        teleport_from_seeds_like(teleport, pg.n, pg.n_pad), pg.inv_out.dtype)
+    tele_np = bias_scaled(
+        teleport_from_seeds_like(teleport, pg.n, pg.n_pad), pg.bias_pad)
+    tele = jnp.asarray(tele_np, pg.inv_out.dtype)
     return _ppr_nosync_impl(
-        pg.src_pad, pg.dst_local, pg.emask, pg.inv_out, pg.dangling, tele,
+        pg.src_pad, pg.dst_local, pg.edge_mult, pg.inv_out, pg.dangling, tele,
         n=pg.n, p=pg.p, vp=pg.vp, n_pad=pg.n_pad, d=d, threshold=threshold,
         max_iter=max_iter, thread_level=thread_level,
         handle_dangling=handle_dangling,
@@ -276,7 +320,7 @@ def teleport_from_seeds_like(teleport, n: int, n_pad: int) -> np.ndarray:
 
 def make_batched_pallas_sweep(
     tiles_src_local, tiles_dst_local, tiles_valid, tile_src_block,
-    tile_dst_block, inv_out_blocks, dangling_blocks,
+    tile_dst_block, inv_out_blocks, dangling_blocks, tiles_weight=None,
     *, n: int, block: int, d: float, handle_dangling: bool, interpret: bool,
 ):
     """``sweep(pr_blocks, tele_blocks, frozen_rows (1,b)) -> new blocks`` —
@@ -284,10 +328,15 @@ def make_batched_pallas_sweep(
     layout.  The Pallas analogue of :func:`make_batched_sweep`, and the ONE
     home of the PPR base formula ``tele·((1-d) + d·dangling_mass_row)`` on
     this backend — shared by :func:`ppr_pallas` and the serving engine's
-    pallas backend so their semantics cannot drift."""
+    pallas backend so their semantics cannot drift.
+
+    ``tiles_weight`` (``None`` = unweighted: ``tiles_valid`` is reused as
+    the kernel's weights operand) scales each edge lane; the teleport rows
+    are expected pre-scaled by any vertex bias (:func:`bias_scaled`)."""
     n_blocks = inv_out_blocks.shape[0]
     vmask = (jnp.arange(n_blocks * block) < n).astype(jnp.float32).reshape(
         n_blocks, block)
+    wt = tiles_valid if tiles_weight is None else tiles_weight
     d_param = jnp.asarray([[d]], jnp.float32)
 
     def sweep(pr_blocks, tele_blocks, frozen_rows):
@@ -299,7 +348,7 @@ def make_batched_pallas_sweep(
         base = tele_blocks * (1.0 - d + d * dmass)[None, :, None]
         return spmv_gs_pass_multi(
             pr_blocks, inv_out_blocks, vmask, frozen_rows, base, d_param,
-            tiles_src_local, tiles_dst_local, tiles_valid,
+            tiles_src_local, tiles_dst_local, tiles_valid, wt,
             tile_src_block, tile_dst_block, block=block, interpret=interpret,
         )
 
@@ -313,7 +362,7 @@ def make_batched_pallas_sweep(
 )
 def _ppr_pallas_impl(
     tiles_src_local, tiles_dst_local, tiles_valid, tile_src_block,
-    tile_dst_block, inv_out_blocks, dangling_blocks, tele_blocks,
+    tile_dst_block, inv_out_blocks, dangling_blocks, tiles_weight, tele_blocks,
     *, n, block, n_blocks, d, threshold, max_iter, handle_dangling, interpret,
 ):
     n_pad = n_blocks * block
@@ -321,7 +370,7 @@ def _ppr_pallas_impl(
     row_axes = (0, 2)  # batch lives on axis 1 of (n_blocks, b, block)
     psweep = make_batched_pallas_sweep(
         tiles_src_local, tiles_dst_local, tiles_valid, tile_src_block,
-        tile_dst_block, inv_out_blocks, dangling_blocks,
+        tile_dst_block, inv_out_blocks, dangling_blocks, tiles_weight,
         n=n, block=block, d=d, handle_dangling=handle_dangling,
         interpret=interpret)
 
@@ -368,11 +417,13 @@ def ppr_pallas(
         return PageRankResult(jnp.zeros((t.shape[0], 0), jnp.float32),
                               jnp.asarray(0, jnp.int32),
                               jnp.asarray(0.0, jnp.float32))
+    if pg.bias_blocks is not None:
+        t = bias_scaled(t, np.asarray(pg.bias_blocks).reshape(-1)[:pg.n])
     tele_blocks = jnp.asarray(blocked_rows(t, pg.n_blocks, pg.block))
     return _ppr_pallas_impl(
         pg.tiles_src_local, pg.tiles_dst_local, pg.tiles_valid,
         pg.tile_src_block, pg.tile_dst_block, pg.inv_out_blocks,
-        pg.dangling_blocks, tele_blocks,
+        pg.dangling_blocks, pg.tiles_weight, tele_blocks,
         n=pg.n, block=pg.block, n_blocks=pg.n_blocks, d=d,
         threshold=threshold, max_iter=max_iter,
         handle_dangling=handle_dangling, interpret=interpret,

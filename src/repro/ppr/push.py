@@ -78,20 +78,30 @@ def ppr_push(
 
     One seed set per call — a batched (nested) spec raises rather than
     silently answering only its first row; batches go through the
-    ``ppr_push`` registry variant, which loops rows."""
-    from repro.ppr.batched import normalize_seeds, teleport_from_seeds
+    ``ppr_push`` registry variant, which loops rows.
+
+    Weighted graphs push ``d·r_v·w(v,u)/outdeg(v)`` along each out-edge —
+    the invariant is linear algebra, so it holds for any edge weights; the
+    ``l1_bound`` certificate additionally needs the weighted walk to stay
+    substochastic, i.e. weights in ``(0, 1]`` (which the decomposition's
+    ``d^k`` weights always are).  A vertex bias scales the teleport row
+    (``t_eff = t·bias``, the PPR-wide convention from
+    :mod:`repro.ppr.batched`)."""
+    from repro.ppr.batched import bias_scaled, normalize_seeds, teleport_from_seeds
 
     rows = normalize_seeds(seeds)
     if len(rows) != 1:
         raise ValueError(
             f"ppr_push answers one seed set per call, got a batch of "
             f"{len(rows)}; use solve_variant('ppr_push', ..., seeds=batch)")
-    t = teleport_from_seeds(rows, g.n)[0]
+    t = bias_scaled(teleport_from_seeds(rows, g.n)[0], g.bias)
     est = np.zeros(g.n)
     r = t.copy()
     if g.n == 0:
         return PushResult(est=est, resid=r, rounds=0, pushes=0)
-    out_ptr, out_dst, _ = g.out_csr()
+    out_ptr, out_dst, out_slot = g.out_csr()
+    # per-edge weights in src-sorted (out-CSR) order, via the dst-order slots
+    w_out = None if g.weights is None else g.weights[out_slot]
     outdeg = g.out_degree.astype(np.int64)
     dangling = outdeg == 0
     pushes = 0
@@ -108,8 +118,10 @@ def ppr_push(
             fl = frontier[live]
             deg = outdeg[fl]
             eidx = _concat_ranges(out_ptr, fl)
-            np.add.at(r, out_dst[eidx],
-                      np.repeat(d * moved[live] / deg, deg))
+            vals = np.repeat(d * moved[live] / deg, deg)
+            if w_out is not None:
+                vals = vals * w_out[eidx]
+            np.add.at(r, out_dst[eidx], vals)
         if handle_dangling:
             dang_mass = d * float(moved[~live].sum())
             if dang_mass > 0.0:

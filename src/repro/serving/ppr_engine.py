@@ -40,6 +40,7 @@ from repro.core.solver import DEFAULT_DAMPING
 from repro.graphs.csr import Graph
 from repro.kernels.spmv.ops import PallasGraph
 from repro.ppr.batched import (
+    bias_scaled,
     blocked_rows,
     make_batched_pallas_sweep,
     make_batched_sweep,
@@ -53,6 +54,14 @@ __all__ = ["PPRQuery", "PPRResponse", "PPREngine", "make_query_stream"]
 
 @dataclasses.dataclass(frozen=True)
 class PPRQuery:
+    """One PPR request: rank the graph from ``seeds``' point of view.
+
+    ``seeds`` is the teleport support (uniform over the set; duplicates are
+    deduped — ``(3, 3, 5)`` and ``(3, 5)`` are the same query and share a
+    cache entry); an empty tuple means a uniform teleport, i.e. the global
+    PageRank question.  ``top_k`` bounds the answer size.  ``qid`` is the
+    caller's correlation id, echoed verbatim on the response."""
+
     qid: int
     seeds: tuple[int, ...] = ()  # empty = uniform teleport (global query)
     top_k: int = 10
@@ -60,6 +69,14 @@ class PPRQuery:
 
 @dataclasses.dataclass
 class PPRResponse:
+    """A harvested answer: the converged slot's top-``k`` vertices.
+
+    ``indices``/``values`` are rank-descending (ties broken by vertex id for
+    determinism); ``iterations`` counts the sweeps charged to the slot at
+    ``iters_per_step`` granularity, so it over-counts by at most one step;
+    ``warm_start`` marks rows seeded from the LRU cache of converged
+    vectors rather than from the teleport row."""
+
     qid: int
     seeds: tuple[int, ...]
     indices: np.ndarray  # (top_k,) vertex ids, rank-descending
@@ -113,6 +130,7 @@ class _JaxBackend:
         dg = DeviceGraph.from_graph(g)
         self.n = g.n
         sweep = make_batched_sweep(dg.src, dg.dst, dg.inv_out, dg.dangling,
+                                   dg.weights,
                                    n=g.n, d=d, handle_dangling=handle_dangling)
         self.state = jnp.zeros((slots, g.n), jnp.float32)
         self.tele = jnp.zeros((slots, g.n), jnp.float32)
@@ -157,7 +175,7 @@ class _PallasBackend:
         sweep = make_batched_pallas_sweep(
             pg.tiles_src_local, pg.tiles_dst_local, pg.tiles_valid,
             pg.tile_src_block, pg.tile_dst_block, pg.inv_out_blocks,
-            pg.dangling_blocks, n=g.n, block=pg.block, d=d,
+            pg.dangling_blocks, pg.tiles_weight, n=g.n, block=pg.block, d=d,
             handle_dangling=handle_dangling, interpret=interpret)
 
         def multi_step(pr, tele, frozen):
@@ -195,7 +213,18 @@ _BACKENDS = {"jax": _JaxBackend, "pallas": _PallasBackend}
 
 
 class PPREngine:
-    """Continuous-batching PPR serving over ``slots`` fixed batch rows."""
+    """Continuous-batching PPR serving over ``slots`` fixed batch rows.
+
+    Lifecycle: :meth:`submit` admits a validated query into a free slot
+    (warm-starting from the LRU cache when the same seed set converged
+    before), :meth:`step` advances every active slot ``iters_per_step``
+    sweeps in one jitted call and harvests/recycles the converged ones,
+    :meth:`drain` runs a whole query list to completion.  ``backend`` picks
+    the compute path (``"jax"`` batched vertex-centric sweep or ``"pallas"``
+    multi-vector blocked GS kernel — see docs/KERNELS.md); both honour
+    weighted/biased graphs, the bias folding into each teleport row at
+    submit time.  ``backend_opts`` pass through to the backend (``block``,
+    ``tile_cap``, ``interpret`` for pallas)."""
 
     def __init__(self, g: Graph, *, slots: int = 8, d: float = DEFAULT_DAMPING,
                  threshold: float = 1e-7, handle_dangling: bool = False,
@@ -243,7 +272,10 @@ class PPREngine:
             slot = self._active.index(None)
         except ValueError:
             return False
-        trow = teleport_from_seeds([tuple(q.seeds)], self.g.n)[0]
+        # the subsystem-wide bias convention (repro.ppr.batched.bias_scaled):
+        # a vertex bias scales the teleport row, t_eff = t·bias
+        trow = bias_scaled(
+            teleport_from_seeds([tuple(q.seeds)], self.g.n)[0], self.g.bias)
         cached = self._cache.get(self._cache_key(q))
         warm = cached is not None
         if warm:

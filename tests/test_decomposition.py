@@ -80,18 +80,32 @@ def test_chain_into_dangling_vertex_closed_form():
 
     The chain interior is indeg-1/outdeg-1; the whole tail is in the dead
     closure; reconstruction must reproduce the closed form
-    pr(c_{i+1}) = (1-d)/n + d * pr(c_i) / outdeg(c_i)."""
+    pr(c_{i+1}) = (1-d)/n + d * pr(c_i) / outdeg(c_i).
+
+    Since the weighted core landed, the mid-graph chain 0→4→0 is pruned
+    too: vertex 4 contracts into the weighted self-edge 0→0 (weight d) with
+    its teleport contribution folded into 0's bias — the core is just {0}.
+    """
     edges = [(0, 4), (4, 0), (0, 1), (1, 2), (2, 3)]
     src, dst = zip(*edges)
     g = Graph.from_edges(5, np.asarray(src), np.asarray(dst))
     chain = g.chain_nodes()
-    assert chain[1] and chain[2]          # interior of the chain
+    assert chain[1] and chain[2] and chain[4]  # interior + the 0→4→0 link
     assert not chain[3] and not chain[0]  # sink has outdeg 0; head has 2
     dead = g.dead_nodes()
     assert dead[1] and dead[2] and dead[3] and not dead[0]
 
     plan = DecompositionPlan.from_graph(g)
-    assert set(np.flatnonzero(plan.pruned)) == {1, 2, 3}
+    assert set(np.flatnonzero(plan.pruned)) == {1, 2, 3, 4}
+    s = plan.stats()
+    assert plan.core.n == 1 and s["contracted_edges"] == 1
+    assert plan.core.weights is not None
+    assert plan.core.weights[0] == pytest.approx(D)  # one-link chain: d^1
+    assert plan.core.bias is not None  # fold: base·(1 + d·bias(4))
+    # the PR-3 suffix-only closure kept vertex 4 live (its edge re-enters
+    # the core) — the weighted core prunes strictly more
+    legacy = DecompositionPlan.from_graph(g, contract=False)
+    assert set(np.flatnonzero(legacy.pruned)) == {1, 2, 3}
     ref, _ = pagerank_numpy(g, threshold=1e-14)
     r = solve_variant("barrier_sticd", g, threshold=1e-10)
     pr = np.asarray(r.pr, np.float64)
@@ -101,6 +115,7 @@ def test_chain_into_dangling_vertex_closed_form():
     assert pr[1] == pytest.approx(base + D * pr[0] / 2, rel=1e-9)
     assert pr[2] == pytest.approx(base + D * pr[1], rel=1e-9)
     assert pr[3] == pytest.approx(base + D * pr[2], rel=1e-9)
+    assert pr[4] == pytest.approx(base + D * pr[0] / 2, rel=1e-9)
 
 
 def test_chain_crossing_partition_boundary():
@@ -185,6 +200,37 @@ def test_sticd_matches_oracle_webstanford_scaledown(vname):
     ref, _ = pagerank_numpy(g, threshold=1e-12)
     r = solve_variant(vname, g, threshold=1e-8, threads=8)
     assert l1_norm(r.pr, ref) < 1e-5
+
+
+@pytest.mark.parametrize("make,strict", [
+    (lambda: make_dataset("webStanford", scale_down=512), True),
+    (chain_sink_heavy_graph, False),
+])
+def test_contracting_plan_prunes_at_least_suffix_only(make, strict):
+    """Acceptance: the weighted-core plan (mid-graph contraction + source
+    chains) never prunes less than the PR-3 suffix-only closure, and prunes
+    strictly more vertices+edges wherever the graph has mid-graph or source
+    chains at all (the webStanford surrogate does; the chain-sink synthetic's
+    chains all drain into the dead region, where suffix-only already wins —
+    tests/test_weighted.py covers the strictly-more mid-chain synthetic)."""
+    g = make()
+    plan = DecompositionPlan.from_graph(g)
+    legacy = DecompositionPlan.from_graph(g, contract=False)
+    s, ls = plan.stats(), legacy.stats()
+    assert int(plan.pruned.sum()) >= int(legacy.pruned.sum())
+    assert s["pruned_edges"] >= ls["pruned_edges"]
+    if strict:
+        assert int(plan.pruned.sum()) > int(legacy.pruned.sum())
+        assert s["pruned_edges"] > ls["pruned_edges"]
+        assert s["core_n"] < ls["core_n"]
+    # same fixed point from both plans
+    ref, _ = pagerank_numpy(g, threshold=1e-12)
+    for p in (plan, legacy):
+        core_r = (solve_variant("barrier", p.core, threshold=1e-9)
+                  if p.core.n else None)
+        pr = p.reconstruct(
+            np.zeros(0) if core_r is None else np.asarray(core_r.pr))
+        assert l1_norm(pr, ref) < 1e-5
 
 
 # ---------------------------------------------------------------------------

@@ -256,10 +256,12 @@ def test_gs_pass_multi_b1_equals_single_vector_pass():
         n_blocks, block)
     pr0 = jnp.full((n_blocks, block), 1.0 / g.n, jnp.float32) * vmask
     d, base = 0.85, 0.15 / g.n
+    # tiles_valid doubles as the weights operand on unweighted graphs
     tiles = (pg.tiles_src_local, pg.tiles_dst_local, pg.tiles_valid,
-             pg.tile_src_block, pg.tile_dst_block)
-    out1 = spmv_gs_pass(pr0, pg.inv_out_blocks, vmask, jnp.zeros_like(vmask),
-                        jnp.asarray([[base, d]], jnp.float32), *tiles,
+             pg.tiles_valid, pg.tile_src_block, pg.tile_dst_block)
+    out1 = spmv_gs_pass(pr0, pg.inv_out_blocks, vmask, vmask,
+                        jnp.zeros_like(vmask),
+                        jnp.asarray([[base, d, 0.0]], jnp.float32), *tiles,
                         block=block, interpret=True)
     b = 3
     prb = jnp.broadcast_to(pr0[:, None, :], (n_blocks, b, block))
@@ -288,7 +290,8 @@ def test_gs_pass_multi_frozen_rows_held():
         prb, pg.inv_out_blocks, vmask, frozen, baseb,
         jnp.asarray([[0.85]], jnp.float32),
         pg.tiles_src_local, pg.tiles_dst_local, pg.tiles_valid,
-        pg.tile_src_block, pg.tile_dst_block, block=block, interpret=True)
+        pg.tiles_valid, pg.tile_src_block, pg.tile_dst_block, block=block,
+        interpret=True)
     assert float(jnp.max(jnp.abs(out[:, 0, :] - prb[:, 0, :]))) == 0.0
     assert float(jnp.max(jnp.abs(out[:, 1, :] - prb[:, 1, :]))) > 0.0
 

@@ -165,15 +165,19 @@ def test_gs_pass_respects_freeze_mask():
     n_pad = n_blocks * block
     vmask = (jnp.arange(n_pad) < g.n).astype(jnp.float32).reshape(n_blocks, block)
     pr0 = jnp.full((n_blocks, block), 1.0 / g.n, jnp.float32) * vmask
-    params = jnp.asarray([[0.15 / g.n, 0.85]], jnp.float32)
+    # params [base, d, dmass]; unweighted/unbiased path passes tiles_valid
+    # as the weights operand and vmask as the bias operand
+    params = jnp.asarray([[0.15 / g.n, 0.85, 0.0]], jnp.float32)
     args = (pgk.tiles_src_local, pgk.tiles_dst_local, pgk.tiles_valid,
-            pgk.tile_src_block, pgk.tile_dst_block)
+            pgk.tiles_valid, pgk.tile_src_block, pgk.tile_dst_block)
     frozen_none = jnp.zeros_like(vmask)
     frozen_all = vmask  # freeze every real vertex
-    out_unfrozen = spmv_gs_pass(pr0, pgk.inv_out_blocks, vmask, frozen_none,
-                                params, *args, block=block, interpret=True)
-    out_frozen = spmv_gs_pass(pr0, pgk.inv_out_blocks, vmask, frozen_all,
-                              params, *args, block=block, interpret=True)
+    out_unfrozen = spmv_gs_pass(pr0, pgk.inv_out_blocks, vmask, vmask,
+                                frozen_none, params, *args, block=block,
+                                interpret=True)
+    out_frozen = spmv_gs_pass(pr0, pgk.inv_out_blocks, vmask, vmask,
+                              frozen_all, params, *args, block=block,
+                              interpret=True)
     assert float(jnp.max(jnp.abs(out_frozen - pr0))) == 0.0
     assert float(jnp.max(jnp.abs(out_unfrozen - pr0))) > 0.0
 

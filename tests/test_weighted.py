@@ -1,0 +1,313 @@
+"""Weighted-graph core tier: per-edge weights + per-vertex bias end-to-end.
+
+The acceptance property of the weighted refactor: EVERY registry variant,
+handed a randomly-weighted (and biased) graph, converges to the float64
+weighted `pagerank_numpy` oracle at L1 < 1e-6 — the same Lemma-2 round-trip
+the unweighted tier asserts, now over the representation the STIC-D
+mid-graph chain contraction produces.  Plus: contraction equivalence when
+chains cross partition boundaries, the d-rebake path of `plan_run`, the
+weighted push certificate, and the weighted container invariants.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, strategies as st
+
+    def settings(**_kw):  # the shim runs a fixed number of examples anyway
+        return lambda f: f
+
+from repro.core import l1_norm, pagerank_numpy
+from repro.core.solver import list_variants, solve_variant
+from repro.graphs import DecompositionPlan
+from repro.graphs.csr import Graph
+
+THRESH = 1e-9
+D = 0.85
+# keep interpreted Pallas kernels fast: small blocks, small tiles
+OPTS = dict(threads=4, block=64, tile_cap=128, interpret=True)
+
+
+def random_weighted_graph(n: int = 48, m: int = 200, seed: int = 0,
+                          biased: bool = True) -> Graph:
+    """Random graph with weights in (0.2, 1.0] (substochastic-walk range —
+    the decomposition only ever emits powers of d) and, optionally, a
+    non-uniform teleport bias."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.uniform(0.2, 1.0, m)
+    bias = rng.uniform(0.5, 1.5, n) if biased else None
+    return Graph.from_edges(n, src, dst, weights=w, bias=bias)
+
+
+# ---------------------------------------------------------------------------
+# container invariants
+# ---------------------------------------------------------------------------
+
+
+def test_from_edges_sorts_weights_with_edges():
+    # edges given out of order: the weight must follow its edge to the
+    # dst-sorted slot, not stay at its input position
+    src = np.asarray([2, 0, 1])
+    dst = np.asarray([1, 2, 0])
+    w = np.asarray([0.3, 0.7, 0.9])
+    g = Graph.from_edges(3, src, dst, weights=w)
+    by_edge = {(int(s), int(t)): float(x)
+               for s, t, x in zip(g.src, g.dst, g.weights)}
+    assert by_edge == {(2, 1): 0.3, (0, 2): 0.7, (1, 0): 0.9}
+    assert g.bias is None  # unbiased stays None — the fast-path sentinel
+
+
+def test_from_edges_rejects_bad_shapes():
+    src, dst = np.asarray([0, 1]), np.asarray([1, 0])
+    with pytest.raises(ValueError, match="weights"):
+        Graph.from_edges(2, src, dst, weights=np.asarray([1.0]))
+    with pytest.raises(ValueError, match="bias"):
+        Graph.from_edges(2, src, dst, bias=np.asarray([1.0]))
+
+
+def test_identical_classes_split_by_weights_and_bias():
+    # 1 and 2 share the in-neighbour set {0} — identical when unweighted,
+    # distinct once the in-edge weights (or biases) differ
+    src, dst = np.asarray([0, 0]), np.asarray([1, 2])
+    g_plain = Graph.from_edges(3, src, dst)
+    cls = g_plain.in_neighbor_classes()
+    assert cls[1] == cls[2]
+    g_w = Graph.from_edges(3, src, dst, weights=np.asarray([0.5, 1.0]))
+    cls = g_w.in_neighbor_classes()
+    assert cls[1] != cls[2]
+    g_b = Graph.from_edges(3, src, dst, bias=np.asarray([1.0, 1.0, 2.0]))
+    cls = g_b.in_neighbor_classes()
+    assert cls[1] != cls[2]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: every registry variant vs the weighted float64 oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vname", sorted(set(list_variants()) - {"sequential"}))
+def test_all_variants_match_weighted_oracle(vname):
+    """The tentpole property: a randomly-weighted, randomly-biased graph is
+    solved by every registered variant to L1 < 1e-6 against the weighted
+    numpy oracle (ppr_* rows answer the uniform-teleport query, which on a
+    biased graph is the global biased solve by the t·bias convention)."""
+    g = random_weighted_graph(seed=3)
+    ref, _ = pagerank_numpy(g, threshold=1e-13)
+    r = solve_variant(vname, g, threshold=THRESH, **OPTS)
+    pr = np.asarray(r.pr, np.float64)
+    if pr.ndim == 2:  # ppr_* variants: one uniform-teleport row
+        assert pr.shape[0] == 1
+        pr = pr[0]
+    assert l1_norm(pr, ref) < 1e-6, vname
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(8, 48), st.booleans())
+def test_property_weighted_fixed_point_shared(seed, n, biased):
+    """Lemma-2 on weighted graphs: barrier/nosync/identical share the
+    weighted oracle's fixed point for arbitrary weights in (0, 1]."""
+    g = random_weighted_graph(n=n, m=4 * n, seed=seed, biased=biased)
+    ref, _ = pagerank_numpy(g, threshold=1e-13)
+    for vname in ("barrier", "nosync", "barrier_identical"):
+        r = solve_variant(vname, g, threshold=THRESH, threads=4)
+        assert l1_norm(r.pr, ref) < 1e-6, (vname, seed)
+
+
+def test_weighted_dangling_round_trip():
+    """handle_dangling composes with weights (redistribution stays uniform,
+    never weight- or bias-scaled) — global variants only: the PPR convention
+    re-teleports onto the biased row instead (see repro.ppr.batched).
+
+    The sticd variants cover the plan path: on weighted graphs the
+    redistributed fixed point does NOT have unit L1 mass (sub-unit weights
+    leak), so this asserts `reconstruct` uses the general scalar closed form
+    `base/(base − (d/n)·Σ_dang pr)`, not plain normalisation."""
+    g = random_weighted_graph(seed=7, biased=False)
+    ref, _ = pagerank_numpy(g, threshold=1e-13, handle_dangling=True)
+    for vname in ("barrier", "nosync", "pallas_nosync", "distributed_barrier",
+                  "barrier_sticd", "nosync_sticd"):
+        r = solve_variant(vname, g, threshold=THRESH, handle_dangling=True,
+                          **OPTS)
+        assert l1_norm(r.pr, ref) < 1e-6, vname
+
+
+def test_weighted_dangling_sticd_with_contraction():
+    """Weighted input + mid-graph contraction + closed-form dangling, all
+    composed — the scalar rescale must stay exact through the plan."""
+    base_g = chains_across_partitions_graph(seed=23)
+    rng = np.random.default_rng(5)
+    # sprinkle sinks so there is real dangling mass
+    src = np.r_[base_g.src, rng.integers(0, 20, 6).astype(np.int32)]
+    dst = np.r_[base_g.dst, np.arange(base_g.n, base_g.n + 6, dtype=np.int32)]
+    g = Graph.from_edges(base_g.n + 6, src, dst,
+                         weights=rng.uniform(0.3, 1.0, src.size))
+    plan = DecompositionPlan.from_graph(g)
+    assert plan.contracted_m > 0 and (g.out_degree == 0).any()
+    ref, _ = pagerank_numpy(g, threshold=1e-13, handle_dangling=True)
+    r = solve_variant("nosync_sticd", g, threshold=THRESH, threads=4,
+                      handle_dangling=True)
+    assert l1_norm(r.pr, ref) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# mid-graph chain contraction
+# ---------------------------------------------------------------------------
+
+
+def chains_across_partitions_graph(n_core: int = 24, n_chains: int = 6,
+                                   chain_len: int = 15, seed: int = 9) -> Graph:
+    """Dense live core + mid-graph chains that leave the core and re-enter
+    it: the chain interiors occupy the high vertex ids, so with threads=4
+    every chain spans multiple partition boundaries of the core solve's
+    reconstruction domain."""
+    rng = np.random.default_rng(seed)
+    edges = [(u, (u + 1) % n_core) for u in range(n_core)]
+    edges += [(int(rng.integers(0, n_core)), int(rng.integers(0, n_core)))
+              for _ in range(4 * n_core)]
+    nxt = n_core
+    for c in range(n_chains):
+        head = int(rng.integers(0, n_core))
+        tail = int(rng.integers(0, n_core))
+        ids = list(range(nxt, nxt + chain_len))
+        nxt += chain_len
+        edges.append((head, ids[0]))
+        edges += [(a, b) for a, b in zip(ids[:-1], ids[1:])]
+        edges.append((ids[-1], tail))
+    src, dst = zip(*edges)
+    return Graph.from_edges(nxt, np.asarray(src), np.asarray(dst))
+
+
+def test_mid_chain_contraction_prunes_strictly_more():
+    """Acceptance: the weighted core prunes strictly more vertices AND edges
+    than the PR-3 suffix-only closure on a mid-chain-heavy graph, and the
+    reconstructed ranks still match the float64 oracle at L1 < 1e-6."""
+    g = chains_across_partitions_graph()
+    plan = DecompositionPlan.from_graph(g)
+    legacy = DecompositionPlan.from_graph(g, contract=False)
+    # suffix-only could prune nothing here (every chain re-enters the core)
+    assert int(plan.pruned.sum()) > int(legacy.pruned.sum())
+    assert plan.stats()["pruned_edges"] > legacy.stats()["pruned_edges"]
+    assert plan.stats()["contracted_edges"] == 6
+    assert plan.core.weights is not None  # d^k contracted weights
+    assert plan.core.bias is not None  # chain teleport folds
+    ref, _ = pagerank_numpy(g, threshold=1e-13)
+    for vname in ("barrier_sticd", "nosync_sticd"):
+        r = solve_variant(vname, g, threshold=THRESH, threads=4)
+        assert l1_norm(r.pr, ref) < 1e-6, vname
+
+
+def test_mid_chain_contraction_equivalence_across_partition_boundaries():
+    """The contracted core partitioned 2/4/8 ways gives the same fixed point
+    (the plan must not interact with partition boundaries), with dangling
+    redistribution on and off."""
+    g = chains_across_partitions_graph(seed=11)
+    for hd in (False, True):
+        ref, _ = pagerank_numpy(g, threshold=1e-13, handle_dangling=hd)
+        for p in (2, 4, 8):
+            r = solve_variant("nosync_sticd", g, threshold=THRESH, threads=p,
+                              handle_dangling=hd)
+            assert l1_norm(r.pr, ref) < 1e-6, (hd, p)
+
+
+def test_source_chain_pruned_without_edge():
+    """A source chain s→c→…→t has no head: pruning folds its teleport
+    contribution into t's bias and emits NO contracted edge."""
+    # irreducible live pair {0,1} (parallel edges keep both degrees at 2,
+    # so neither is a chain candidate); source chain 3 -> 4 -> 0
+    edges = [(0, 1), (0, 1), (1, 0), (1, 0), (3, 4), (4, 0)]
+    src, dst = zip(*edges)
+    g = Graph.from_edges(5, np.asarray(src), np.asarray(dst))
+    assert bool(g.source_chain_nodes()[3])
+    plan = DecompositionPlan.from_graph(g)
+    assert set(np.flatnonzero(plan.pruned)) == {2, 3, 4}  # 2 is a lone sink
+    s = plan.stats()
+    assert s["contracted_edges"] == 0 and plan.core.bias is not None
+    ref, _ = pagerank_numpy(g, threshold=1e-14)
+    r = solve_variant("barrier_sticd", g, threshold=1e-10)
+    assert l1_norm(r.pr, ref) < 1e-6
+    # closed form: pr(3) = base, pr(4) = base + d·pr(3) — exact, because the
+    # pruned region reconstructs in float64 regardless of the core's dtype
+    base = (1 - D) / g.n
+    pr = np.asarray(r.pr, np.float64)
+    assert pr[3] == pytest.approx(base, rel=1e-9)
+    assert pr[4] == pytest.approx(base * (1 + D), rel=1e-9)
+
+
+def test_plan_rebakes_on_damping_mismatch():
+    """Contracted weights are powers of d: a build sees the run d up front
+    (no wasted double plan), and a bundle built for one d but run with
+    another re-plans instead of silently reusing the stale core."""
+    from repro.core.solver import build_variant, get_variant
+
+    g = chains_across_partitions_graph(seed=13)
+    assert DecompositionPlan.from_graph(g).contracted_m > 0
+    # build_variant forwards d, so the plan is baked right the first time
+    _, bundle = build_variant("barrier_sticd", g, d=0.6)
+    assert bundle.plan.d == 0.6
+    for d in (0.85, 0.6):
+        ref, _ = pagerank_numpy(g, d=d, threshold=1e-13)
+        r = solve_variant("barrier_sticd", g, d=d, threshold=THRESH)
+        assert l1_norm(r.pr, ref) < 1e-6, d
+    # the safety net: a d=0.85 bundle run at d=0.6 must still be exact
+    v = get_variant("barrier_sticd")
+    _, stale = build_variant("barrier_sticd", g)  # bakes the default 0.85
+    ref, _ = pagerank_numpy(g, d=0.6, threshold=1e-13)
+    r = v.run(stale, d=0.6, threshold=THRESH)
+    assert l1_norm(r.pr, ref) < 1e-6
+
+
+def test_reconstruct_rejects_stale_damping():
+    g = chains_across_partitions_graph(seed=13)
+    plan = DecompositionPlan.from_graph(g, d=0.85)
+    with pytest.raises(ValueError, match="re-plan"):
+        plan.reconstruct(np.zeros(plan.core.n), d=0.6)
+
+
+def test_biased_graph_rejects_closed_form_dangling():
+    """The L1-normalisation closed form needs a uniform full-graph teleport;
+    an explicitly biased input graph must raise, not silently mis-solve."""
+    g = random_weighted_graph(seed=5, biased=True)
+    plan = DecompositionPlan.from_graph(g)
+    if not plan.pruned.any():  # ensure the plan path actually runs
+        pytest.skip("plan pruned nothing on this surrogate")
+    with pytest.raises(ValueError, match="uniform"):
+        plan.reconstruct(np.zeros(plan.core.n), handle_dangling=True)
+
+
+def test_sticd_on_weighted_input_graph():
+    """The plan composes with an ALREADY weighted/biased input graph: kept
+    edges keep their weights, contraction multiplies chain-edge weights into
+    d^k, input bias folds into the closed forms."""
+    base_g = chains_across_partitions_graph(seed=21)
+    rng = np.random.default_rng(3)
+    g = Graph.from_edges(
+        base_g.n, base_g.src, base_g.dst,
+        weights=rng.uniform(0.3, 1.0, base_g.m),
+        bias=rng.uniform(0.5, 1.5, base_g.n),
+    )
+    assert DecompositionPlan.from_graph(g).contracted_m > 0
+    ref, _ = pagerank_numpy(g, threshold=1e-13)
+    r = solve_variant("nosync_sticd", g, threshold=THRESH, threads=4)
+    assert l1_norm(r.pr, ref) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# weighted push certificate
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_push_certificate_holds():
+    """The push invariant is linear algebra: with weights in (0, 1] the
+    remaining-residual L1 bound still dominates the true error."""
+    from repro.ppr import ppr_push
+
+    g = random_weighted_graph(seed=17, biased=False)
+    ref, _ = pagerank_numpy(g, threshold=1e-14)
+    res = ppr_push(g, None, rmax=1e-7)
+    true_err = float(np.abs(res.est - ref).sum())
+    assert true_err <= res.l1_bound + 1e-12
+    assert res.l1_bound < 1e-4
