@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, time_call
+from benchmarks.common import csv_row
 from repro.configs import get_config
 from repro.data.tokens import DataConfig, SyntheticCorpus
 from repro.training.local_sgd import make_local_sgd_step, replicate_state

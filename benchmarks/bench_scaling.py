@@ -4,7 +4,6 @@ Simulated makespans with per-sweep jitter show the paper's scaling gap:
 the barrier pays max-over-workers every iteration, no-sync doesn't."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import SCALE_DOWN, csv_row
 from repro.core import DeviceGraph, PartitionedGraph, pagerank_barrier, pagerank_nosync

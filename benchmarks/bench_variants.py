@@ -124,8 +124,19 @@ def bench_records(name: str, scale_down: float = SCALE_DOWN) -> list[dict]:
             # solvers that own their loop, e.g. the shard_map modes) — the
             # artifact shows convergence curves, not just endpoints
             "residuals": _trajectory(r, iters),
+            # static-analyzer VMEM estimate for the kernel this variant runs
+            # (None for non-Pallas backends) — the artifact carries the
+            # budget its kernel was certified under, so an over-budget
+            # config is visible next to the wall time it produced
+            "vmem": _variant_vmem(v),
         })
     return records
+
+
+def _variant_vmem(v) -> dict | None:
+    from repro.analysis.vmem import variant_vmem
+
+    return variant_vmem(v)
 
 
 def _trajectory(r, iters: int) -> list[float]:

@@ -6,8 +6,14 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint: ruff (or built-in F401/F841 fallback) =="
+python scripts/lint.py
+
 echo "== tier-1: pytest =="
 python -m pytest -x -q "$@"
+
+echo "== static analysis: ANALYSIS.json (strict — unsuppressed findings fail) =="
+python -m repro.analysis --strict --json ANALYSIS.json
 
 echo "== smoke: registry imports (--list) =="
 python -m repro.launch.pagerank_run --list

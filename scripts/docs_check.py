@@ -1,14 +1,18 @@
 #!/usr/bin/env python
 """Docs smoke: the documentation may not drift from the code.
 
-Two checks, both driven from the live registry / live imports:
+Three checks, all driven from the live registry / live imports:
 
 1. every registered variant name appears (backticked) in README.md's
    variant table;
 2. every backticked ``repro.*`` code reference in README.md and docs/*.md
    — ``module``, ``module.symbol`` or ``module.Class.attr``, optionally
    with a call suffix — resolves by importing the longest importable module
-   prefix and walking the remaining attributes.
+   prefix and walking the remaining attributes;
+3. the generated VMEM table embedded in docs/KERNELS.md equals a fresh run
+   of the static analyzer (``repro.analysis.vmem.kernels_markdown``) — a
+   kernel-signature change must be followed by
+   ``python -m repro.analysis --write-docs-table``.
 
 Run from the repo root (check.sh does): ``python scripts/docs_check.py``.
 Exits non-zero listing every stale reference, so a renamed function whose
@@ -80,6 +84,23 @@ def main() -> int:
                                 f"code reference `{ref}`")
     print(f"resolved {n_refs} code references across "
           f"{len(DOC_FILES)} docs files")
+
+    from repro.analysis.vmem import DOCS_BEGIN, DOCS_END, kernels_markdown
+
+    kernels_md = (ROOT / "docs" / "KERNELS.md").read_text(encoding="utf-8")
+    if DOCS_BEGIN not in kernels_md or DOCS_END not in kernels_md:
+        failures.append("docs/KERNELS.md lost the generated VMEM table "
+                        "markers")
+    else:
+        embedded = (DOCS_BEGIN
+                    + kernels_md.split(DOCS_BEGIN, 1)[1].split(DOCS_END)[0]
+                    + DOCS_END)
+        if embedded.strip() != kernels_markdown().strip():
+            failures.append(
+                "docs/KERNELS.md VMEM table is stale vs the analyzer — run "
+                "`python -m repro.analysis --write-docs-table`")
+        else:
+            print("docs/KERNELS.md VMEM table matches the live analyzer")
 
     if failures:
         for f in failures:

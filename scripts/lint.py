@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Lint gate: ruff when available, built-in pyflakes subset otherwise.
+
+    python scripts/lint.py [paths...]     # default: src/ tests/ scripts/ benchmarks/
+
+The CI container has no ruff wheel and package installs are pinned, so this
+driver prefers a real ``ruff check`` (honouring ruff.toml) and otherwise
+falls back to a small AST checker for the two rules that catch real bugs
+rather than style:
+
+* **F401** — module-level import never used (honours ``# noqa`` on the
+  import line and names re-exported via ``__all__``; ``from __future__``
+  and ``import x  # noqa: F401`` registration-side-effect imports pass).
+* **F841** — local variable assigned and never read (simple ``name = ...``
+  targets inside functions; ``_``-prefixed names are intentional discards).
+
+Exit status 1 on any finding, 0 when clean — same contract either way, so
+scripts/check.sh calls this unconditionally.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import shutil
+import subprocess
+import sys
+
+DEFAULT_PATHS = ("src", "tests", "scripts", "benchmarks")
+
+
+def run_ruff(paths: list[str]) -> int:
+    return subprocess.call(["ruff", "check", *paths])
+
+
+# ---------------------------------------------------------------------------
+# Fallback: F401 + F841 on the stdlib ast module
+# ---------------------------------------------------------------------------
+
+
+def _noqa_lines(source: str) -> set[int]:
+    return {i for i, line in enumerate(source.splitlines(), 1)
+            if "# noqa" in line}
+
+
+def _f401(tree: ast.Module, source: str) -> list[tuple[int, str]]:
+    noqa = _noqa_lines(source)
+    imported: dict[str, tuple[int, str]] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name.split(".")[0]
+                imported[name] = (node.lineno, a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                name = a.asname or a.name
+                imported[name] = (node.lineno, a.name)
+    if not imported:
+        return []
+
+    used: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            root = node
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name):
+                used.add(root.id)
+    # names re-exported through __all__ count as used
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    for el in getattr(node.value, "elts", []):
+                        if isinstance(el, ast.Constant):
+                            used.add(str(el.value))
+
+    return [(line, f"F401 `{qual}` imported but unused")
+            for name, (line, qual) in imported.items()
+            if name not in used and line not in noqa]
+
+
+def _f841(tree: ast.Module, source: str) -> list[tuple[int, str]]:
+    noqa = _noqa_lines(source)
+    out: list[tuple[int, str]] = []
+    for fn in (n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))):
+        assigned: dict[str, int] = {}
+        loaded: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                if not name.startswith("_"):
+                    assigned.setdefault(name, node.lineno)
+            elif isinstance(node, ast.Name) and not isinstance(node.ctx, ast.Store):
+                loaded.add(node.id)
+        # a nested scope may read the name through its closure
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                                 ast.AsyncFunctionDef)) and node is not fn:
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Name):
+                        loaded.add(sub.id)
+        out.extend((line, f"F841 local variable `{name}` assigned but never used")
+                   for name, line in assigned.items()
+                   if name not in loaded and line not in noqa)
+    return out
+
+
+def run_fallback(paths: list[str]) -> int:
+    failures = 0
+    files: list[pathlib.Path] = []
+    for p in map(pathlib.Path, paths):
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    for f in files:
+        source = f.read_text()
+        try:
+            tree = ast.parse(source, filename=str(f))
+        except SyntaxError as e:
+            print(f"{f}:{e.lineno}: E999 {e.msg}")
+            failures += 1
+            continue
+        for line, msg in sorted(_f401(tree, source) + _f841(tree, source)):
+            print(f"{f}:{line}: {msg}")
+            failures += 1
+    if failures:
+        print(f"lint (fallback F401/F841): {failures} finding(s)")
+    return 1 if failures else 0
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or [p for p in DEFAULT_PATHS if pathlib.Path(p).exists()]
+    if shutil.which("ruff"):
+        return run_ruff(paths)
+    return run_fallback(paths)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

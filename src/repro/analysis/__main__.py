@@ -1,0 +1,111 @@
+"""CLI for the static-analysis passes.
+
+    PYTHONPATH=src python -m repro.analysis [--json ANALYSIS.json] [--strict]
+                                            [--pass vmem|jaxpr|contracts]
+                                            [--write-docs-table]
+
+Prints every finding (suppressed ones with their documented reason — they
+stay visible, never hidden); ``--strict`` exits 1 iff any *unsuppressed*
+finding remains, which is the ``scripts/check.sh`` gate.  ``--json`` writes
+the machine-readable report (findings + per-kernel VMEM tables) that
+``scripts/docs_check.py`` diffs against docs/KERNELS.md.
+``--write-docs-table`` rewrites the generated VMEM table in docs/KERNELS.md
+in place (run after any kernel-signature change).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.analysis.findings import apply_suppressions, unsuppressed
+
+
+def _collect(passes: set[str]):
+    findings = []
+    kernel_reports = {}
+    if "vmem" in passes:
+        from repro.analysis.vmem import analyze_kernels, vmem_findings
+
+        findings.extend(vmem_findings())
+        kernel_reports = {k: r.to_dict() for k, r in analyze_kernels().items()}
+    if "jaxpr" in passes:
+        from repro.analysis.jaxpr_lint import jaxpr_findings
+
+        findings.extend(jaxpr_findings())
+    if "contracts" in passes:
+        from repro.analysis.contracts import contract_findings
+
+        findings.extend(contract_findings())
+    return apply_suppressions(findings), kernel_reports
+
+
+def _rewrite_docs_table(path: pathlib.Path) -> int:
+    from repro.analysis.vmem import DOCS_BEGIN, DOCS_END, kernels_markdown
+
+    text = path.read_text()
+    if DOCS_BEGIN not in text or DOCS_END not in text:
+        print(f"{path}: generated-table markers not found", file=sys.stderr)
+        return 1
+    head, rest = text.split(DOCS_BEGIN, 1)
+    _, tail = rest.split(DOCS_END, 1)
+    path.write_text(head + kernels_markdown() + tail)
+    print(f"rewrote VMEM table in {path}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract + VMEM-budget analysis of the Pallas "
+                    "kernels and the variant registry")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any unsuppressed finding remains")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=("vmem", "jaxpr", "contracts"), default=None,
+                    help="run only the named pass(es); default: all three")
+    ap.add_argument("--write-docs-table", action="store_true",
+                    help="rewrite the generated VMEM table in docs/KERNELS.md")
+    args = ap.parse_args(argv)
+
+    if args.write_docs_table:
+        root = pathlib.Path(__file__).resolve().parents[3]
+        return _rewrite_docs_table(root / "docs" / "KERNELS.md")
+
+    passes = set(args.passes or ("vmem", "jaxpr", "contracts"))
+    findings, kernel_reports = _collect(passes)
+
+    for name, rep in kernel_reports.items():
+        print(f"vmem: {name}: {rep['per_vertex_bytes_expr']} B/vertex, "
+              f"max {rep['max_vertices_per_core_b1'] or 'n/a (streaming)'} "
+              f"vertices/core (b=1)")
+    hard = unsuppressed(findings)
+    for f in findings:
+        if f.suppressed:
+            print(f"SUPPRESSED [{f.pass_name}] {f.target}: {f.check} — "
+                  f"{f.reason}")
+        else:
+            print(f"FINDING [{f.pass_name}] {f.target}: {f.check} — "
+                  f"{f.message}")
+    print(f"{len(findings)} finding(s), {len(hard)} unsuppressed, "
+          f"passes: {', '.join(sorted(passes))}")
+
+    if args.json_path:
+        report = {
+            "passes": sorted(passes),
+            "findings": [f.to_dict() for f in findings],
+            "unsuppressed": len(hard),
+            "kernels": kernel_reports,
+        }
+        pathlib.Path(args.json_path).write_text(json.dumps(report, indent=2)
+                                                + "\n")
+        print(f"wrote {args.json_path}")
+
+    return 1 if (args.strict and hard) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

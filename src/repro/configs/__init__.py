@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional
 
 from repro.configs.base import EncoderConfig, MLAConfig, ModelConfig, MoEConfig, SSMConfig
 

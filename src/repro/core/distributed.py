@@ -34,13 +34,11 @@ single-device variants.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.pagerank import DEFAULT_DAMPING, PageRankResult, PartitionedGraph
 from repro.core.solver import register_variant

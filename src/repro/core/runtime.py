@@ -23,11 +23,8 @@ solver driver.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pagerank import DEFAULT_DAMPING, PartitionedGraph

@@ -341,6 +341,12 @@ class Variant:
 
 _REGISTRY: dict[str, Variant] = {}
 
+# Closed metadata vocabularies the generic drivers dispatch on (see
+# :class:`Variant`); ``register_variant`` enforces them at import time and
+# ``repro.analysis.contracts`` re-audits the registry against the same sets.
+BACKENDS = frozenset({"numpy", "jax", "pallas", "shard_map"})
+SCHEDULES = frozenset({"barrier", "nosync", "sequential"})
+
 # Options the launcher/benchmarks pass uniformly; variants that don't need
 # one ignore it (e.g. --threads with a barrier variant, --local-sweeps with
 # any single-device variant), mirroring the CLI.  ``local_sweeps`` and
@@ -375,11 +381,25 @@ def register_variant(name: str, build: Callable, run: Callable,
     beyond the transport set (anything else raises in :func:`build_variant`);
     ``layout``/``backend``/``schedule`` are the metadata triple the generic
     drivers dispatch on — see :class:`Variant` for the vocabulary.  All four
-    metadata strings are asserted non-empty by the registry tests.
+    metadata strings are validated **here**, so a bad registration fails at
+    import of its defining module, not first use (the registry test keeps a
+    regression copy of the same assertion).
 
     Registration normally happens at import time of the defining module;
     add new modules to ``_ensure_registered`` so enumeration sees them.
     """
+    problems = []
+    if not description:
+        problems.append("description must be non-empty (printed by --list)")
+    if not layout:
+        problems.append("layout must be non-empty (bundle-sharing key)")
+    if backend not in BACKENDS:
+        problems.append(f"backend {backend!r} not in {sorted(BACKENDS)}")
+    if schedule not in SCHEDULES:
+        problems.append(f"schedule {schedule!r} not in {sorted(SCHEDULES)}")
+    if problems:
+        raise ValueError(
+            f"register_variant({name!r}): " + "; ".join(problems))
     v = Variant(name=name, build=build, run=run, description=description,
                 options=options, layout=layout, backend=backend,
                 schedule=schedule)

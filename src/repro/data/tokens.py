@@ -6,7 +6,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -35,7 +35,7 @@ from repro.core.solver import (
     register_variant,
     solve,
 )
-from repro.graphs.csr import BlockedCOO, Graph, build_blocked_coo, inv_out_and_dangling
+from repro.graphs.csr import Graph, build_blocked_coo, inv_out_and_dangling
 from repro.kernels.spmv.kernel import spmv_blocked, spmv_gs_pass
 
 SCHEDULES = ("barrier", "nosync")

@@ -152,14 +152,21 @@ def main(argv=None) -> int:
 
     if args.list:
         # print the full metadata triple the registry carries — the drivers
-        # dispatch on it, so the operator should see it too
-        header = f"{'variant':20s} {'layout':18s} {'backend':10s} {'schedule':10s} description"
+        # dispatch on it, so the operator should see it too — plus the
+        # static contract audit's verdict per variant (✓, or the failed
+        # check keys; see docs/ANALYSIS.md)
+        from repro.analysis.contracts import audit_registry
+
+        audit = audit_registry()
+        header = (f"{'variant':20s} {'layout':18s} {'backend':10s} "
+                  f"{'schedule':10s} {'contract':10s} description")
         print(header)
         print("-" * len(header))
         for name in list_variants():
             v = get_variant(name)
+            flags = ",".join(sorted({f.check for f in audit[name]})) or "✓"
             print(f"{name:20s} {v.layout:18s} {v.backend:10s} {v.schedule:10s} "
-                  f"{v.description}")
+                  f"{flags:10s} {v.description}")
         return 0
 
     g = make_dataset(args.dataset, scale_down=args.scale_down)

@@ -10,8 +10,6 @@ compiles the exact production computation with zero real allocation
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -20,9 +18,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ShapeSpec
 from repro.configs.base import ModelConfig
-from repro.models.model import decode_step, forward, init_cache, init_params
+from repro.models.model import forward, init_cache, init_params
 from repro.serving.engine import make_serve_step
-from repro.sharding.rules import batch_spec, param_specs
+from repro.sharding.rules import param_specs
 from repro.training.train_step import TrainState, init_train_state, make_train_step
 
 

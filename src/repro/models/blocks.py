@@ -7,7 +7,6 @@ stack still scans as one homogeneous body.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

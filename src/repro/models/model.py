@@ -14,7 +14,6 @@ on the body), keeping the HLO O(1) in depth — essential for compiling the
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -76,7 +75,6 @@ def init_params(cfg: ModelConfig, rng) -> dict:
         )
         params["shared_attn"] = blocks.decoder_block_init(k_shared, cfg, dtype)
     elif cfg.encoder:  # whisper
-        enc_cfg = cfg
         params["enc_layers"] = _stack_init(
             k_enc, cfg.encoder.n_layers, lambda k: _enc_block_init(k, cfg, dtype)
         )

@@ -114,9 +114,7 @@ def mamba1_init_cache(cfg: ModelConfig, batch: int, dtype):
 def mamba1_decode(params, cfg: ModelConfig, x, cache):
     """Single-token step; O(1) state — no KV growth at 500k context."""
     s_cfg = cfg.ssm
-    b = x.shape[0]
     d = cfg.d_model
-    di = s_cfg.expand * d
     dt_rank = s_cfg.dt_rank or max(1, d // 16)
 
     xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])  # (B,1,2di)

@@ -35,7 +35,6 @@ tests assert.
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -3,14 +3,14 @@ engine (request queue, slot allocation, per-slot positions)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.model import decode_step, forward, init_cache
+from repro.models.model import decode_step, init_cache
 
 
 def make_serve_step(cfg: ModelConfig, *, layer_unroll: bool = False):

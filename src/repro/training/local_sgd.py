@@ -20,15 +20,13 @@ staleness can diverge; H is the bounded-staleness knob.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.training.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update
 from repro.training.train_step import TrainState, loss_fn
 
 

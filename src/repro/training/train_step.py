@@ -1,15 +1,12 @@
 """Training step: causal-LM loss, grads, AdamW — pjit/GSPMD-ready."""
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.common import pad_vocab
 from repro.models.model import forward
 from repro.training.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
 

@@ -51,7 +51,6 @@ def collective_bytes(hlo_text: str) -> dict:
             if re.search(rf"=\s*[^=]*\b{kind}(-start|-done)?\(", s):
                 if kind == "all-reduce" and "all-reduce-done" in s:
                     continue  # counted at -start
-                shapes = _SHAPE_RE.findall("=".join(s.split("=")[1:]).split("(")[0])
                 lhs = _SHAPE_RE.finditer(s.split("(")[0])
                 total = sum(_shape_bytes(m) for m in lhs)
                 out[kind] += total

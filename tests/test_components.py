@@ -1,6 +1,5 @@
 """Component-level tests: MoE dispatch equivalence, SSM decode consistency,
 chunked attention exactness, RoPE/M-RoPE properties, optimizer."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +11,6 @@ try:
 except ImportError:
     from _hypothesis_compat import given, settings, strategies as st
 
-from repro.configs import get_config
 from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
 from repro.models import attention as attn_mod
 from repro.models.mlp import moe_apply, moe_apply_sparse, moe_init

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.core import FaultPlan, PartitionedGraph, l1_norm, pagerank_numpy, simulate
 from repro.graphs import rmat_graph
 
@@ -143,7 +143,6 @@ def test_sim_sleep_hurts_barrier_not_waitfree(pg):
     sleep = {(0, it): 5.0 for it in range(1, 200)}
     base_b = simulate(pg, "barrier", threshold=1e-8).sim_time
     slow_b = simulate(pg, "barrier", FaultPlan(sleeps=sleep), threshold=1e-8).sim_time
-    base_w = simulate(pg, "waitfree", threshold=1e-8).sim_time
     slow_w = simulate(pg, "waitfree", FaultPlan(sleeps=sleep), threshold=1e-8).sim_time
     assert slow_b > base_b * 3
     assert slow_w < slow_b  # helping absorbs the sleeping partition

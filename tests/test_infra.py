@@ -5,7 +5,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.ckpt import latest_step, restore_into, save_checkpoint
 from repro.core import SolverCheckpoint

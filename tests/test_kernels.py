@@ -1,6 +1,5 @@
 """Per-kernel interpret-mode allclose vs the pure-jnp oracles, with
 hypothesis shape/dtype sweeps (per the deliverable-(c) contract)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -12,7 +11,6 @@ except ImportError:
 
 from repro.core import pagerank_numpy, l1_norm
 from repro.graphs import build_blocked_coo, rmat_graph
-from repro.graphs.csr import Graph
 from repro.kernels.flash_attention import attention_ref, flash_attention_kernel
 from repro.kernels.spmv import PallasGraph, pagerank_pallas, spmv_blocked, spmv_blocked_ref, spmv_ref
 
