@@ -1,0 +1,139 @@
+"""Out-of-core build benchmark: per-stage wall clock + peak RSS.
+
+Runs the staged pipeline (``repro.graphs.pipeline``: generate → reorder →
+layout) stage by stage, each in its **own subprocess**, and reports per
+stage:
+
+  * wall-clock seconds;
+  * peak resident set size (``ru_maxrss`` via ``os.wait4`` — the OS
+    high-water mark of the whole stage process, the honest bound a
+    "streamed build is bounded-memory" claim must be measured by, not a
+    sampled estimate);
+
+plus the final store's on-disk size and the layout stage's tile-occupancy
+counters.  The point of the artifact: peak RSS must stay roughly flat as
+``--scale`` grows (it tracks ``chunk_edges`` + the O(n) vertex arrays, not
+the edge count) — that is the acceptance criterion of the out-of-core
+pipeline, recorded per run in ``BENCH_build.json`` so regressions show as
+numbers.
+
+    PYTHONPATH=src python benchmarks/bench_build.py --scale 18 \
+        --json BENCH_build.json
+
+Stage subprocesses resume off the shared pipeline directory exactly like a
+killed-and-rerun ``pagerank_run build`` would, so this benchmark also
+exercises the resume path end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+from benchmarks.common import csv_row
+
+STAGES = ("generate", "reorder", "layout")
+
+_STAGE_SNIPPET = """\
+import sys
+from repro.graphs.pipeline import BuildConfig, run_pipeline
+cfg = BuildConfig.from_dict({cfg!r})
+run_pipeline({out!r}, cfg, stages=[{stage!r}], log=lambda m: None)
+"""
+
+
+def _run_stage_subprocess(out_dir: str, cfg_dict: dict, stage: str) -> dict:
+    """Run one pipeline stage in a child process; return wall + peak RSS."""
+    code = _STAGE_SNIPPET.format(cfg=cfg_dict, out=out_dir, stage=stage)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    prev = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + prev if prev else "")
+    t0 = time.perf_counter()
+    proc = subprocess.Popen([sys.executable, "-c", code], env=env)
+    _, status, ru = os.wait4(proc.pid, 0)
+    wall = time.perf_counter() - t0
+    if status != 0:
+        raise RuntimeError(f"stage {stage!r} failed (status {status:#x})")
+    # ru_maxrss is KiB on Linux, bytes on macOS
+    peak = ru.ru_maxrss * (1 if sys.platform == "darwin" else 1024)
+    return {"stage": stage, "wall_s": round(wall, 3),
+            "peak_rss_mb": round(peak / 2**20, 1)}
+
+
+def bench_build(out_dir: str, scale: int, avg_degree: int = 8, seed: int = 0,
+                chunk_edges: int = 1 << 21, order: str = "bfs",
+                threads: int = 56) -> dict:
+    from repro.graphs.pipeline import BuildConfig
+    from repro.graphs.store import GraphStore, is_store
+    from repro.graphs.pipeline import final_store_path
+
+    cfg = BuildConfig(scale=scale, avg_degree=avg_degree, seed=seed,
+                      chunk_edges=chunk_edges, order=order, threads=threads)
+    stages = [s for s in STAGES if not (s == "reorder" and order == "none")]
+    stage_recs = [_run_stage_subprocess(out_dir, cfg.to_dict(), s)
+                  for s in stages]
+    store = GraphStore(final_store_path(out_dir))
+    layout = store.layout() or {}
+    return {
+        "scale": scale,
+        "n": store.n,
+        "m": store.m,
+        "order": order,
+        "chunk_edges": chunk_edges,
+        "stages": stage_recs,
+        "store_bytes": store.nbytes(),
+        "tile_occupancy": layout.get("tile_stats"),
+    }
+
+
+def _rows(rec: dict) -> list[str]:
+    rows = []
+    for s in rec["stages"]:
+        rows.append(csv_row(
+            f"build/scale{rec['scale']}/{s['stage']}", s["wall_s"] * 1e6,
+            f"peak_rss_mb={s['peak_rss_mb']};m={rec['m']}"))
+    occ = rec["tile_occupancy"]
+    if occ:
+        rows.append(csv_row(
+            f"build/scale{rec['scale']}/occupancy",
+            0.0, f"occupancy={occ['occupancy']:.4f};n_tiles={occ['n_tiles']}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=18)
+    ap.add_argument("--avg-degree", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk-edges", type=int, default=1 << 21)
+    ap.add_argument("--order", choices=("none", "bfs", "degree", "random"),
+                    default="bfs")
+    ap.add_argument("--threads", type=int, default=56)
+    ap.add_argument("--out", default=None,
+                    help="pipeline directory (default: a temp dir, removed "
+                         "afterwards; pass one to keep the store)")
+    ap.add_argument("--json", default=None, help="also write the record as JSON")
+    args = ap.parse_args(argv)
+
+    if args.out is None:
+        with tempfile.TemporaryDirectory(prefix="bench_build_") as td:
+            rec = bench_build(td, args.scale, args.avg_degree, args.seed,
+                              args.chunk_edges, args.order, args.threads)
+    else:
+        rec = bench_build(args.out, args.scale, args.avg_degree, args.seed,
+                          args.chunk_edges, args.order, args.threads)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=1)
+    print("\n".join(_rows(rec)))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

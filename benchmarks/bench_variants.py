@@ -22,7 +22,12 @@ Two measurements per (dataset × variant):
     makespan.
 
 ``--json PATH`` additionally writes the records as JSON (the ``check.sh``
-perf-trajectory artifact ``BENCH_variants.json``).
+perf-trajectory artifact ``BENCH_variants.json``).  Records of variants with
+a blocked (tiled) bundle carry its ``tile_occupancy`` counters, and
+``--reorder {none,bfs,degree,random}`` benches under a vertex reordering
+(``repro.graphs.reorder``) — together they measure how much locality
+ordering raises tile occupancy, the payoff the build pipeline's reorder
+stage is for.
 """
 from __future__ import annotations
 
@@ -47,8 +52,13 @@ LOCAL_SWEEPS = 2
 INTERPRET = not on_tpu()
 
 
-def bench_records(name: str, scale_down: float = SCALE_DOWN) -> list[dict]:
+def bench_records(name: str, scale_down: float = SCALE_DOWN,
+                  reorder: str = "none") -> list[dict]:
     g = make_dataset(name, scale_down=scale_down)
+    if reorder != "none":
+        from repro.graphs.reorder import compute_order, permute_graph
+
+        g = permute_graph(g, compute_order(g, reorder))
     ref, it_seq = pagerank_numpy(g, threshold=1e-12)
     pg = PartitionedGraph.from_graph(g, p=P)
     # actual per-partition edge loads of the equal-vertex allocation drive
@@ -111,6 +121,11 @@ def bench_records(name: str, scale_down: float = SCALE_DOWN) -> list[dict]:
         records.append({
             "dataset": name,
             "variant": vname,
+            "reorder": reorder,
+            # occupancy counters of the variant's tiled bundle (None for
+            # untiled layouts) — the fraction of kernel lanes doing real
+            # edge work, the number vertex reordering exists to raise
+            "tile_occupancy": _tile_occupancy(bundle),
             "wall_us": wall * 1e6,
             "iters": iters,
             "sim_speedup_vs_seq": sim_seq / sim,
@@ -131,6 +146,21 @@ def bench_records(name: str, scale_down: float = SCALE_DOWN) -> list[dict]:
             "vmem": _variant_vmem(v),
         })
     return records
+
+
+def _tile_occupancy(bundle) -> dict | None:
+    """Occupancy counters of a bundle's blocked tile layout, when it has one
+    (plan-staged bundles are unwrapped to their inner core bundle)."""
+    from repro.graphs.csr import tile_occupancy_stats
+
+    inner = getattr(bundle, "bundle", bundle)
+    tv = getattr(inner, "tiles_valid", None)
+    if tv is None:
+        return None
+    valid = np.asarray(tv)
+    return tile_occupancy_stats(n_edges=int(valid.sum()),
+                                n_tiles=int(valid.shape[0]),
+                                tile_cap=int(valid.shape[1]))
 
 
 def _variant_vmem(v) -> dict | None:
@@ -162,10 +192,10 @@ def _rows(records: list[dict]) -> list[str]:
 
 
 def main(datasets=None, scale_down: float = SCALE_DOWN,
-         json_path: str | None = None) -> list[str]:
+         json_path: str | None = None, reorder: str = "none") -> list[str]:
     records = []
     for ds in (datasets or BENCH_DATASETS):
-        records += bench_records(ds, scale_down=scale_down)
+        records += bench_records(ds, scale_down=scale_down, reorder=reorder)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(records, f, indent=1)
@@ -178,6 +208,11 @@ if __name__ == "__main__":
                     help="comma-separated subset (default: all bench datasets)")
     ap.add_argument("--scale-down", type=float, default=SCALE_DOWN)
     ap.add_argument("--json", default=None, help="also write records as JSON")
+    ap.add_argument("--reorder", choices=("none", "bfs", "degree", "random"),
+                    default="none",
+                    help="bench under a vertex reordering; blocked records'"
+                         " tile_occupancy shows the locality payoff")
     args = ap.parse_args()
     ds = args.datasets.split(",") if args.datasets else None
-    print("\n".join(main(ds, scale_down=args.scale_down, json_path=args.json)))
+    print("\n".join(main(ds, scale_down=args.scale_down, json_path=args.json,
+                         reorder=args.reorder)))

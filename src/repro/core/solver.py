@@ -443,9 +443,21 @@ def build_variant(name: str, g, *, d: float = DEFAULT_DAMPING,
     build bakes the damping factor into contracted edge weights, so building
     with the ``d`` you intend to run avoids :func:`plan_run`'s re-plan.
 
+    ``g`` may also be a path (``str`` / ``os.PathLike``) to an on-disk graph
+    store (:mod:`repro.graphs.store`); it is opened memmap-backed, so builds
+    stream the edge arrays instead of loading them resident — the out-of-core
+    entry point shared by the launcher's ``--store`` flag and the build
+    benchmarks.
+
     Unknown options raise instead of being silently dropped — a typo'd or
     unsupported option (e.g. ``perforate`` on ``nosync``: use ``nosync_opt``)
     must not let the caller believe it was applied."""
+    import os
+
+    if isinstance(g, (str, os.PathLike)):
+        from repro.graphs.store import load_graph
+
+        g = load_graph(g, mmap=True)
     v = get_variant(name)
     unknown = set(opts) - _TRANSPORT_OPTS - set(v.options)
     if unknown:

@@ -22,7 +22,7 @@ derivation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Iterator, Optional
 
 import numpy as np
 
@@ -81,6 +81,69 @@ class Graph:
     @property
     def m(self) -> int:
         return int(self.src.shape[0])
+
+    @property
+    def is_memmap(self) -> bool:
+        """True when the edge arrays are ``np.memmap``-backed (store-loaded).
+
+        Every analysis and downstream build works off the array protocol —
+        slicing/fancy-indexing a memmap materializes only the touched range —
+        so this is informational (benchmarks record it), not a capability
+        switch."""
+        return isinstance(self.src, np.memmap)
+
+    @classmethod
+    def from_arrays(cls, n: int, src: np.ndarray, dst: np.ndarray,
+                    out_degree: np.ndarray, in_ptr: np.ndarray,
+                    weights: Optional[np.ndarray] = None,
+                    bias: Optional[np.ndarray] = None) -> "Graph":
+        """Trusted constructor over pre-derived arrays — no sort, no copy.
+
+        This is the store loader's entry (:mod:`repro.graphs.store`): the
+        on-disk format already holds dst-sorted edges plus the derived
+        ``out_degree``/``in_ptr``, and the arrays may be read-only
+        ``np.memmap`` views.  Callers must guarantee the :class:`Graph`
+        invariants (dst-sorted order, consistent degrees/indptr) —
+        :meth:`repro.graphs.store.GraphStore.graph` does, validated at
+        store-write time."""
+        return cls(n=n, src=src, dst=dst, out_degree=out_degree,
+                   in_ptr=in_ptr, weights=weights, bias=bias)
+
+    def edge_chunks(
+        self, chunk_edges: int = 1 << 20,
+    ) -> Iterator[tuple[int, np.ndarray, np.ndarray, Optional[np.ndarray]]]:
+        """Yield ``(lo, src, dst, weights)`` chunks of the dst-sorted edge
+        arrays as **resident** ndarrays (``weights`` is ``None`` on
+        unweighted graphs).
+
+        The streaming accessor every out-of-core consumer iterates —
+        store writers, the reorder rewrite, blocked-layout statistics —
+        so peak memory stays O(chunk_edges) even when the graph itself is
+        a memmap view of a much larger store."""
+        if chunk_edges < 1:
+            raise ValueError("chunk_edges must be >= 1")
+        for lo in range(0, self.m, chunk_edges):
+            hi = min(lo + chunk_edges, self.m)
+            w = None if self.weights is None else np.asarray(self.weights[lo:hi])
+            yield lo, np.asarray(self.src[lo:hi]), np.asarray(self.dst[lo:hi]), w
+
+    def materialize(self) -> "Graph":
+        """Copy of this graph with every array resident in RAM.
+
+        Device builds ultimately materialize whatever they touch anyway;
+        this is for callers that iterate many passes over a memmap-backed
+        graph (e.g. the in-RAM oracle during store verification) and would
+        otherwise re-page the file each pass."""
+        return Graph(
+            n=self.n,
+            src=np.asarray(self.src).copy(),
+            dst=np.asarray(self.dst).copy(),
+            out_degree=np.asarray(self.out_degree).copy(),
+            in_ptr=np.asarray(self.in_ptr).copy(),
+            weights=(None if self.weights is None
+                     else np.asarray(self.weights).copy()),
+            bias=None if self.bias is None else np.asarray(self.bias).copy(),
+        )
 
     @classmethod
     def from_edges(cls, n: int, src: np.ndarray, dst: np.ndarray,
@@ -639,6 +702,68 @@ class BlockedCOO:
     @property
     def num_tiles(self) -> int:
         return int(self.tiles_src_local.shape[0])
+
+    def occupancy(self) -> dict:
+        """Tile-occupancy counters of this built layout — see
+        :func:`tile_occupancy_stats` for the field meanings."""
+        valid = np.asarray(self.tiles_valid)
+        return tile_occupancy_stats(
+            n_edges=int(valid.sum()),
+            n_tiles=self.num_tiles,
+            tile_cap=int(valid.shape[1]) if valid.ndim == 2 else 0,
+        )
+
+
+def tile_occupancy_stats(n_edges: int, n_tiles: int, tile_cap: int) -> dict:
+    """Occupancy summary of a BlockedCOO layout: ``occupancy`` is valid
+    entries / total tile capacity — the fraction of kernel lanes doing real
+    edge work (the rest is padding the MXU still pays for).  Build-time
+    vertex reordering exists to raise this number; ``bench_variants --json``
+    records it per blocked layout so the win is measured, not asserted."""
+    cap_total = n_tiles * tile_cap
+    return {
+        "n_edges": int(n_edges),
+        "n_tiles": int(n_tiles),
+        "tile_cap": int(tile_cap),
+        "occupancy": float(n_edges / cap_total) if cap_total else 0.0,
+        "mean_fill": float(n_edges / n_tiles) if n_tiles else 0.0,
+    }
+
+
+def blocked_tile_stats(g: Graph, block: int = 256, tile_cap: int = 1024,
+                       chunk_edges: int = 1 << 20) -> dict:
+    """Streaming :class:`BlockedCOO` occupancy — **without building tiles**.
+
+    One pass over :meth:`Graph.edge_chunks` counts edges per
+    ``(dst_block, src_block)`` bucket; the tile count is then
+    ``Σ ceil(count / tile_cap)`` plus one coverage tile per dst block no
+    bucket touched (``build_blocked_coo`` emits those so the kernel
+    initializes every output run).  Peak memory is O(chunk_edges + distinct
+    buckets), so the layout stage of the out-of-core pipeline can derive
+    occupancy for stores far larger than RAM."""
+    n_blocks = -(-g.n // block)
+    # per-chunk (bucket, count) summaries, folded together vectorized at the
+    # end — a chunk contributes at most its distinct buckets, so the resident
+    # footprint is far below one row per edge
+    key_parts: list[np.ndarray] = []
+    cnt_parts: list[np.ndarray] = []
+    for _, src, dst, _ in g.edge_chunks(chunk_edges):
+        bucket = (dst // block).astype(np.int64) * n_blocks + (src // block)
+        uniq, cnt = np.unique(bucket, return_counts=True)
+        key_parts.append(uniq)
+        cnt_parts.append(cnt)
+    if key_parts:
+        keys, inv = np.unique(np.concatenate(key_parts), return_inverse=True)
+        counts = np.zeros(keys.shape[0], dtype=np.int64)
+        np.add.at(counts, inv, np.concatenate(cnt_parts))
+    else:
+        keys = counts = np.zeros(0, dtype=np.int64)
+    n_tiles = int((-(-counts // tile_cap)).sum())
+    covered = np.unique(keys // n_blocks).shape[0]
+    n_tiles += n_blocks - covered  # coverage tiles for empty dst blocks
+    stats = tile_occupancy_stats(g.m, n_tiles, tile_cap)
+    stats.update(block=block, n_blocks=n_blocks, n_buckets=int(keys.shape[0]))
+    return stats
 
 
 def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> BlockedCOO:

@@ -5,16 +5,28 @@ modelled by an R-MAT / lattice surrogate with the same vertex/edge counts
 (scaled by ``scale_down`` for CI-sized runs).  Web/social graphs use skewed
 R-MAT parameters; road networks use near-uniform ones (they are close to
 planar lattices with tiny skew).
+
+Datasets can be **cached** in the on-disk store format
+(:mod:`repro.graphs.store`): pass ``cache_dir`` or set the
+``REPRO_DATASET_CACHE`` environment variable and :func:`make_dataset` writes
+each ``(name, scale_down, seed)`` instantiation once, then reloads it
+memmap-backed with checksum verification — a corrupted or truncated cache
+entry is detected by its CRC manifest and rebuilt, never returned.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import shutil
+from typing import Optional
 
 import numpy as np
 
 from repro.graphs.csr import Graph
 from repro.graphs.rmat import rmat_edges
+
+CACHE_ENV = "REPRO_DATASET_CACHE"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,21 +64,75 @@ DATASETS = {
 }
 
 
-def make_dataset(name: str, scale_down: float = 1.0, seed: int = 0) -> Graph:
+def dataset_cache_path(name: str, scale_down: float, seed: int,
+                       cache_dir: str) -> str:
+    """Store directory for one ``(name, scale_down, seed)`` instantiation."""
+    # scale_down is a float; repr() keeps 1 vs 1.5 distinct without
+    # colliding on formatting
+    tag = repr(float(scale_down)).replace(".", "p")
+    return os.path.join(str(cache_dir), f"{name}_sd{tag}_seed{seed}")
+
+
+def make_dataset(
+    name: str,
+    scale_down: float = 1.0,
+    seed: int = 0,
+    cache_dir: Optional[str] = None,
+    mmap: bool = True,
+) -> Graph:
     """Instantiate a surrogate graph for a Table-1 dataset.
 
     ``scale_down`` divides both vertex and edge counts (CI uses e.g. 64).
+
+    With ``cache_dir`` set (or the ``REPRO_DATASET_CACHE`` env var), the
+    built graph is persisted in the store format and later calls reload it —
+    ``mmap=True`` returns it memmap-backed so a cache hit costs no resident
+    edge memory.  Every hit is CRC-verified; a failed check rebuilds the
+    entry in place rather than surfacing corrupt arrays.
     """
+    if cache_dir is None:
+        cache_dir = os.environ.get(CACHE_ENV) or None
+    if cache_dir is not None:
+        from repro.graphs.store import (
+            StoreError, is_store, load_graph, save_graph,
+        )
+
+        path = dataset_cache_path(name, scale_down, seed, cache_dir)
+        if is_store(path):
+            try:
+                return load_graph(path, mmap=mmap, verify=True)
+            except StoreError:
+                shutil.rmtree(path)  # corrupt cache entry: rebuild below
+        g = _build_dataset(name, scale_down, seed)
+        os.makedirs(cache_dir, exist_ok=True)
+        save_graph(path, g, extra={"dataset": name,
+                                   "scale_down": float(scale_down),
+                                   "seed": seed})
+        return g
+    return _build_dataset(name, scale_down, seed)
+
+
+def _dataset_rmat_params(
+    name: str, scale_down: float,
+) -> tuple[int, int, tuple[float, float, float]]:
+    """``(n, m, (a, b, c))`` of a surrogate instantiation — shared by the
+    in-RAM build below and the out-of-core pipeline's ``build --dataset``
+    path, so both generate the identical graph."""
     spec = DATASETS[name]
     n = max(64, int(spec.n_vertices / scale_down))
     m = max(128, int(spec.n_edges / scale_down))
-    scale = max(6, math.ceil(math.log2(n)))
     if spec.family == "road":
-        a, b, c = 0.30, 0.25, 0.25  # near-uniform, low skew
+        abc = (0.30, 0.25, 0.25)  # near-uniform, low skew
     elif spec.family == "web":
-        a, b, c = 0.60, 0.19, 0.19
+        abc = (0.60, 0.19, 0.19)
     else:
-        a, b, c = 0.57, 0.19, 0.19
+        abc = (0.57, 0.19, 0.19)
+    return n, m, abc
+
+
+def _build_dataset(name: str, scale_down: float, seed: int) -> Graph:
+    n, m, (a, b, c) = _dataset_rmat_params(name, scale_down)
+    scale = max(6, math.ceil(math.log2(n)))
     src, dst = rmat_edges(scale, m, a=a, b=b, c=c, seed=seed)
     # fold down to exactly n vertices
     src = (src % n).astype(np.int32)

@@ -3,12 +3,102 @@
 The paper's synthetic datasets D10..D70 are R-MAT graphs with ~1e6..7e6 edges.
 We reproduce the generator so the benchmark suite can rebuild the same family
 at any scale (scaled down for CI, scaled up for the dry-run).
+
+Two entry shapes share one random stream:
+
+* :func:`rmat_edges` — the legacy vectorized form: all ``n_edges`` at once.
+* :func:`rmat_edge_chunks` — a **chunk emitter** for the out-of-core build
+  pipeline (:mod:`repro.graphs.pipeline`): yields bounded ``(src, dst)``
+  chunks and never materializes the full edge list.
+
+Determinism contract: the two are **bit-identical per seed**.  The legacy
+generator draws ``scale`` level arrays of ``n_edges`` doubles from one
+``PCG64(seed)`` stream and then one permutation; PCG64 consumes exactly one
+64-bit word per double, so chunk ``[lo, hi)`` of level ``ℓ`` occupies stream
+offsets ``[ℓ·n_edges + lo, ℓ·n_edges + hi)`` and the emitter reproduces it
+with ``PCG64(seed).advance(ℓ·n_edges + lo)``.  The decorrelation permutation
+lives at offset ``scale·n_edges``.  tests/test_store.py pins the equality so
+existing fixture graphs stay bit-identical at every chunk size.
 """
 from __future__ import annotations
+
+from typing import Iterator, Optional
 
 import numpy as np
 
 from repro.graphs.csr import Graph
+
+
+def _rng_at(seed: int, offset: int) -> np.random.Generator:
+    """``default_rng(seed)`` fast-forwarded by ``offset`` double draws."""
+    bg = np.random.PCG64(seed)
+    bg.advance(offset)
+    return np.random.Generator(bg)
+
+
+def rmat_vertex_perm(scale: int, n_edges: int, seed: int = 0) -> np.ndarray:
+    """The id-decorrelation permutation the legacy generator applies last.
+
+    It is drawn *after* the ``scale × n_edges`` level randoms, so its stream
+    offset is fixed by ``(scale, n_edges, seed)`` — chunk emitters share the
+    identical permutation without having drawn the level randoms first."""
+    return _rng_at(seed, scale * n_edges).permutation(1 << scale)
+
+
+def rmat_chunk(
+    scale: int,
+    n_edges: int,
+    lo: int,
+    hi: int,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    seed: int = 0,
+    perm: Optional[np.ndarray] = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Edges ``[lo, hi)`` of the ``(scale, n_edges, seed)`` R-MAT stream.
+
+    Bit-identical to ``rmat_edges(...)[lo:hi]`` at any chunk boundary (see
+    the module docstring for the stream-offset argument).  ``perm`` lets a
+    caller emitting many chunks reuse one :func:`rmat_vertex_perm`."""
+    if not 0 <= lo <= hi <= n_edges:
+        raise ValueError(f"chunk [{lo}, {hi}) outside [0, {n_edges})")
+    k = hi - lo
+    src = np.zeros(k, dtype=np.int64)
+    dst = np.zeros(k, dtype=np.int64)
+    for level in range(scale):
+        r = _rng_at(seed, level * n_edges + lo).random(k)
+        # quadrant choice: a (TL), b (TR), c (BL), d (BR)
+        right = (r >= a) & (r < a + b) | (r >= a + b + c)
+        down = r >= a + b
+        src = src * 2 + down
+        dst = dst * 2 + right
+    if perm is None:
+        perm = rmat_vertex_perm(scale, n_edges, seed)
+    return perm[src].astype(np.int32), perm[dst].astype(np.int32)
+
+
+def rmat_edge_chunks(
+    scale: int,
+    n_edges: int,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    seed: int = 0,
+    chunk_edges: int = 1 << 20,
+) -> Iterator[tuple[int, np.ndarray, np.ndarray]]:
+    """Yield ``(lo, src, dst)`` chunks covering the full edge stream in order.
+
+    Peak memory is O(chunk_edges + 2**scale) — the per-chunk level randoms
+    plus the shared vertex permutation — independent of ``n_edges``."""
+    if chunk_edges < 1:
+        raise ValueError("chunk_edges must be >= 1")
+    perm = rmat_vertex_perm(scale, n_edges, seed)
+    for lo in range(0, n_edges, chunk_edges):
+        hi = min(lo + chunk_edges, n_edges)
+        src, dst = rmat_chunk(scale, n_edges, lo, hi, a=a, b=b, c=c,
+                              seed=seed, perm=perm)
+        yield lo, src, dst
 
 
 def rmat_edges(

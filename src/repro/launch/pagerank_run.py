@@ -16,6 +16,17 @@ Two subcommands expose the personalized-PageRank subsystem:
     # continuous-batching PPR serving demo over random seed queries
     ... -m repro.launch.pagerank_run serve --dataset webStanford \
         --slots 8 --queries 32
+
+The ``build`` subcommand runs the out-of-core pipeline (generate → reorder →
+layout, resumable; see docs/STORAGE.md) and the main solve path accepts the
+result via ``--store``:
+
+    ... -m repro.launch.pagerank_run build --out /tmp/g22 --scale 22
+    ... -m repro.launch.pagerank_run --store /tmp/g22 --variant nosync
+
+A killed ``build`` resumes from its last completed chunk; ``--store`` loads
+the graph memmap-backed and un-permutes ranks to original vertex ids before
+printing or checkpointing.
 """
 from __future__ import annotations
 
@@ -119,15 +130,86 @@ def serve_main(argv) -> int:
     return 0
 
 
+def build_main(argv) -> int:
+    ap = argparse.ArgumentParser(prog="pagerank_run build")
+    ap.add_argument("--out", required=True,
+                    help="pipeline directory (PIPELINE.json + raw/ + "
+                         "reordered/ stores); rerun with the same --out to "
+                         "resume an interrupted build")
+    src = ap.add_mutually_exclusive_group()
+    src.add_argument("--scale", type=int, default=None,
+                     help="R-MAT scale: 2**scale vertices")
+    src.add_argument("--dataset", choices=tuple(DATASETS), default=None,
+                     help="build a Table-1 surrogate instead of a pure R-MAT")
+    ap.add_argument("--scale-down", type=float, default=1.0,
+                    help="dataset surrogate scale-down (with --dataset)")
+    ap.add_argument("--avg-degree", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk-edges", type=int, default=1 << 21,
+                    help="edges per streamed chunk — the peak-memory knob")
+    ap.add_argument("--order", choices=("none", "bfs", "degree", "random"),
+                    default="bfs")
+    ap.add_argument("--no-dedupe", action="store_true",
+                    help="keep duplicate edges (R-MAT builds dedupe by "
+                         "default, dataset surrogates never do)")
+    ap.add_argument("--threads", type=int, default=56)
+    ap.add_argument("--block", type=int, default=256)
+    ap.add_argument("--tile-cap", type=int, default=1024)
+    ap.add_argument("--stages", default=None,
+                    help="comma-separated subset of generate,reorder,layout "
+                         "(default: all)")
+    args = ap.parse_args(argv)
+    if args.scale is None and args.dataset is None:
+        ap.error("one of --scale / --dataset is required")
+
+    import math
+
+    from repro.graphs.datasets import _dataset_rmat_params
+    from repro.graphs.pipeline import BuildConfig, run_pipeline
+    from repro.graphs.store import GraphStore
+
+    if args.dataset is not None:
+        n, m, (a, b, c) = _dataset_rmat_params(args.dataset, args.scale_down)
+        cfg = BuildConfig(
+            scale=max(6, math.ceil(math.log2(n))), n_edges=m, fold_n=n,
+            a=a, b=b, c=c, seed=args.seed, dedupe=False,
+            chunk_edges=args.chunk_edges, order=args.order,
+            threads=args.threads, block=args.block, tile_cap=args.tile_cap)
+    else:
+        cfg = BuildConfig(
+            scale=args.scale, avg_degree=args.avg_degree, seed=args.seed,
+            dedupe=not args.no_dedupe, chunk_edges=args.chunk_edges,
+            order=args.order, threads=args.threads, block=args.block,
+            tile_cap=args.tile_cap)
+    stages = args.stages.split(",") if args.stages else None
+    res = run_pipeline(args.out, cfg, stages=stages)
+    store = GraphStore(res["store"])
+    print(f"store: {store.path}  n={store.n} m={store.m} "
+          f"order={store.meta.get('order')} "
+          f"bytes={store.nbytes():,}")
+    lay = store.layout()
+    if lay:
+        ts = lay["tile_stats"]
+        print(f"layout: threads={lay['threads']} tiles={ts['n_tiles']} "
+              f"occupancy={ts['occupancy']:.3f}")
+    return 0
+
+
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "query":
         return query_main(argv[1:])
     if argv and argv[0] == "serve":
         return serve_main(argv[1:])
+    if argv and argv[0] == "build":
+        return build_main(argv[1:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", choices=tuple(DATASETS), default="webStanford")
     ap.add_argument("--scale-down", type=float, default=256.0)
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="solve a `build` pipeline directory (or a bare store "
+                         "directory) memmap-backed instead of --dataset; "
+                         "ranks are un-permuted to original vertex ids")
     ap.add_argument("--variant", choices=list_variants(), default="nosync")
     ap.add_argument("--threads", type=int, default=56)
     ap.add_argument("--threshold", type=float, default=1e-8)
@@ -169,8 +251,22 @@ def main(argv=None) -> int:
                   f"{flags:10s} {v.description}")
         return 0
 
-    g = make_dataset(args.dataset, scale_down=args.scale_down)
-    print(f"{args.dataset}: n={g.n} m={g.m} (scale_down={args.scale_down:g})")
+    perm = None
+    if args.store:
+        from repro.graphs.store import GraphStore, is_store
+        from repro.graphs.pipeline import final_store_path
+
+        path = args.store if is_store(args.store) \
+            else final_store_path(args.store)
+        store = GraphStore(path)
+        g = store.graph(mmap=True)
+        perm = store.perm()
+        print(f"store {store.path}: n={g.n} m={g.m} "
+              f"order={store.meta.get('order')} (memmap)")
+    else:
+        g = make_dataset(args.dataset, scale_down=args.scale_down)
+        print(f"{args.dataset}: n={g.n} m={g.m} "
+              f"(scale_down={args.scale_down:g})")
     ref, it_seq = pagerank_numpy(g, threshold=1e-12,
                                  handle_dangling=args.handle_dangling)
 
@@ -202,6 +298,11 @@ def main(argv=None) -> int:
         pr = pr[0]
     wall = time.time() - t0
 
+    if perm is not None:
+        # a reordered store solves in stored order; report in ORIGINAL ids
+        from repro.graphs.reorder import unpermute_ranks
+
+        pr, ref = unpermute_ranks(pr, perm), unpermute_ranks(ref, perm)
     print(f"variant={args.variant}: iterations={iters} err={err:.2e} wall={wall:.2f}s")
     print(f"L1 vs sequential(1e-12, {it_seq} iters): {l1_norm(pr, ref):.3e}")
     print(f"top-5 ranks: {np.argsort(pr)[::-1][:5].tolist()}")

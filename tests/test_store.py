@@ -1,0 +1,241 @@
+"""Out-of-core graph store, streaming R-MAT, reorder, and build pipeline.
+
+Covers the storage layer's contracts end to end:
+
+* store round-trip — an in-RAM graph saved and reloaded (resident *and*
+  memmap-backed, with weights and bias) is array-identical;
+* the chunked R-MAT emitter is **bit-identical** to the legacy vectorized
+  generator at every chunk size, so fixture graphs are stable per seed;
+* reordering is exact — un-permuted ranks match the original graph's to
+  1e-10, through registry variants, not just the oracle;
+* a killed-and-resumed pipeline produces a bit-identical store (CRC match);
+* the dataset cache hits, detects tampering, and rebuilds;
+* BFS ordering measurably beats random ordering on tile occupancy.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.pagerank import pagerank_numpy
+from repro.core.solver import solve_variant
+from repro.graphs.csr import Graph, blocked_tile_stats
+from repro.graphs.datasets import dataset_cache_path, make_dataset
+from repro.graphs.pipeline import BuildConfig, run_pipeline
+from repro.graphs.reorder import (
+    ORDERS, compute_order, invert_perm, permute_graph, unpermute_ranks,
+)
+from repro.graphs.rmat import (
+    rmat_chunk, rmat_edge_chunks, rmat_edges, rmat_graph, rmat_vertex_perm,
+)
+from repro.graphs.store import (
+    GraphStore, StoreChecksumError, is_store, load_graph, save_graph,
+)
+
+
+def _assert_graphs_equal(a: Graph, b: Graph):
+    assert a.n == b.n and a.m == b.m
+    for name in ("src", "dst", "out_degree", "in_ptr"):
+        assert np.array_equal(np.asarray(getattr(a, name)),
+                              np.asarray(getattr(b, name))), name
+    for name in ("weights", "bias"):
+        va, vb = getattr(a, name), getattr(b, name)
+        assert (va is None) == (vb is None), name
+        if va is not None:
+            np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                       rtol=0, atol=0)
+
+
+class TestStoreRoundTrip:
+    def test_plain_graph(self, tmp_path):
+        g = rmat_graph(8, avg_degree=6, seed=3)
+        st = save_graph(tmp_path / "s", g)
+        st.verify()
+        for mmap in (False, True):
+            h = load_graph(tmp_path / "s", mmap=mmap, verify=True)
+            _assert_graphs_equal(g, h)
+            assert h.is_memmap == mmap
+
+    def test_weighted_biased_graph(self, tmp_path):
+        g = rmat_graph(7, avg_degree=5, seed=1)
+        rng = np.random.default_rng(0)
+        g.weights = rng.random(g.m)
+        g.bias = rng.random(g.n)
+        save_graph(tmp_path / "s", g)
+        for mmap in (False, True):
+            _assert_graphs_equal(g, load_graph(tmp_path / "s", mmap=mmap))
+
+    def test_memmap_solves_like_resident(self, tmp_path):
+        g = rmat_graph(8, seed=5)
+        save_graph(tmp_path / "s", g)
+        h = load_graph(tmp_path / "s", mmap=True)
+        pr_g, _ = pagerank_numpy(g, threshold=1e-12)
+        pr_h, _ = pagerank_numpy(h, threshold=1e-12)
+        np.testing.assert_allclose(pr_h, pr_g, rtol=0, atol=0)
+
+    def test_checksum_tamper_detected(self, tmp_path):
+        g = rmat_graph(6, seed=2)
+        save_graph(tmp_path / "s", g)
+        with open(tmp_path / "s" / "src.bin", "r+b") as f:
+            f.seek(4)
+            f.write(b"\x99")
+        with pytest.raises(StoreChecksumError):
+            load_graph(tmp_path / "s", verify=True)
+        # unverified load still works (the fast path trusts the manifest)
+        load_graph(tmp_path / "s", verify=False)
+
+    def test_empty_graph(self, tmp_path):
+        g = Graph.from_edges(4, np.zeros(0, np.int32), np.zeros(0, np.int32))
+        save_graph(tmp_path / "s", g)
+        h = load_graph(tmp_path / "s", mmap=True)
+        _assert_graphs_equal(g, h)
+
+
+class TestRmatChunks:
+    @pytest.mark.parametrize("seed", [0, 11])
+    def test_bit_identical_to_legacy(self, seed):
+        scale, m = 9, 3000
+        s_ref, d_ref = rmat_edges(scale, m, seed=seed)
+        for chunk_edges in (1, 577, 1024, m, m + 5):
+            got = list(rmat_edge_chunks(scale, m, seed=seed,
+                                        chunk_edges=chunk_edges))
+            s = np.concatenate([c[1] for c in got])
+            d = np.concatenate([c[2] for c in got])
+            assert np.array_equal(s, s_ref)
+            assert np.array_equal(d, d_ref)
+
+    def test_arbitrary_slice(self):
+        scale, m = 8, 2000
+        s_ref, d_ref = rmat_edges(scale, m, seed=4)
+        perm = rmat_vertex_perm(scale, m, seed=4)
+        s, d = rmat_chunk(scale, m, 700, 1300, seed=4, perm=perm)
+        assert np.array_equal(s, s_ref[700:1300])
+        assert np.array_equal(d, d_ref[700:1300])
+
+
+class TestReorder:
+    @pytest.mark.parametrize("kind", [k for k in ORDERS if k != "none"])
+    def test_perm_is_a_permutation(self, kind):
+        g = rmat_graph(8, seed=7)
+        perm = compute_order(g, kind, seed=1)
+        assert np.array_equal(np.sort(perm), np.arange(g.n))
+        assert np.array_equal(perm[invert_perm(perm)], np.arange(g.n))
+
+    @pytest.mark.parametrize("kind", ["bfs", "degree", "random"])
+    def test_unpermuted_ranks_match(self, kind):
+        g = rmat_graph(8, avg_degree=6, seed=9)
+        perm = compute_order(g, kind, seed=2)
+        pg = permute_graph(g, perm)
+        pr_ref, _ = pagerank_numpy(g, threshold=1e-13)
+        pr_perm, _ = pagerank_numpy(pg, threshold=1e-13)
+        assert np.abs(unpermute_ranks(pr_perm, perm) - pr_ref).max() < 1e-10
+
+    def test_variants_from_reordered_store(self, tmp_path):
+        """The acceptance path: reordered memmap store solved through
+        registry variants (barrier, pallas_nosync, a STIC-D planned one)
+        lands within L1 < 1e-6 of the in-RAM oracle after un-permutation."""
+        g = rmat_graph(8, avg_degree=6, seed=13)
+        perm = compute_order(g, "bfs")
+        save_graph(tmp_path / "s", permute_graph(g, perm), perm=perm)
+        store = GraphStore(tmp_path / "s")
+        assert np.array_equal(store.perm(), perm)
+        ref, _ = pagerank_numpy(g, threshold=1e-12)
+        for variant in ("barrier", "pallas_nosync", "nosync_sticd"):
+            r = solve_variant(variant, store.path, threshold=1e-9,
+                              threads=4, interpret=True)
+            pr = unpermute_ranks(np.asarray(r.pr), perm)
+            assert np.abs(pr - ref).sum() < 1e-6, variant
+
+
+class TestPipeline:
+    CFG = dict(scale=9, avg_degree=6, seed=21, chunk_edges=700, threads=4)
+
+    def test_build_matches_in_ram(self, tmp_path):
+        cfg = BuildConfig(order="none", **self.CFG)
+        res = run_pipeline(tmp_path / "b", cfg, log=lambda m: None)
+        g = GraphStore(res["store"]).graph(mmap=False)
+        _assert_graphs_equal(
+            g, rmat_graph(cfg.scale, cfg.avg_degree, seed=cfg.seed))
+
+    def test_reordered_build_solves_to_oracle(self, tmp_path):
+        cfg = BuildConfig(order="bfs", **self.CFG)
+        res = run_pipeline(tmp_path / "b", cfg, log=lambda m: None)
+        store = GraphStore(res["store"])
+        g = store.graph(mmap=True)
+        assert g.is_memmap
+        ref, _ = pagerank_numpy(
+            rmat_graph(cfg.scale, cfg.avg_degree, seed=cfg.seed),
+            threshold=1e-13)
+        pr, _ = pagerank_numpy(g, threshold=1e-13)
+        assert np.abs(unpermute_ranks(pr, store.perm()) - ref).max() < 1e-10
+        assert store.layout() is not None
+
+    def test_resume_is_bit_identical(self, tmp_path):
+        cfg = BuildConfig(order="bfs", **self.CFG)
+        # interrupted: generate alone, then a resume runs the rest
+        run_pipeline(tmp_path / "killed", cfg, stages=["generate"],
+                     log=lambda m: None)
+        a = run_pipeline(tmp_path / "killed", log=lambda m: None)
+        b = run_pipeline(tmp_path / "fresh", cfg, log=lambda m: None)
+        crc = lambda r: {k: v["crc32"] for k, v in
+                         GraphStore(r["store"]).meta["arrays"].items()}
+        assert crc(a) == crc(b)
+
+    def test_resume_skips_completed_stages(self, tmp_path):
+        cfg = BuildConfig(order="degree", **self.CFG)
+        run_pipeline(tmp_path / "b", cfg, log=lambda m: None)
+        res = run_pipeline(tmp_path / "b", log=lambda m: None)
+        assert all(v.get("skipped") for v in res["stages"].values())
+
+    def test_config_mismatch_rejected(self, tmp_path):
+        cfg = BuildConfig(order="none", **self.CFG)
+        run_pipeline(tmp_path / "b", cfg, stages=["generate"],
+                     log=lambda m: None)
+        other = BuildConfig(order="none", **{**self.CFG, "seed": 99})
+        with pytest.raises(ValueError, match="different config"):
+            run_pipeline(tmp_path / "b", other, log=lambda m: None)
+
+    def test_out_of_order_stage_rejected(self, tmp_path):
+        cfg = BuildConfig(order="bfs", **self.CFG)
+        with pytest.raises(ValueError, match="needs 'generate'"):
+            run_pipeline(tmp_path / "b", cfg, stages=["reorder"],
+                         log=lambda m: None)
+
+
+class TestDatasetCache:
+    ARGS = dict(name="socEpinions1", scale_down=512.0, seed=0)
+
+    def test_hit_returns_identical_graph(self, tmp_path):
+        ref = make_dataset(self.ARGS["name"], self.ARGS["scale_down"])
+        g1 = make_dataset(cache_dir=str(tmp_path), **self.ARGS)
+        _assert_graphs_equal(ref, g1)
+        g2 = make_dataset(cache_dir=str(tmp_path), **self.ARGS)
+        assert g2.is_memmap  # the hit is memmap-backed, not rebuilt
+        _assert_graphs_equal(ref, g2)
+
+    def test_tampered_entry_rebuilt(self, tmp_path):
+        make_dataset(cache_dir=str(tmp_path), **self.ARGS)
+        path = dataset_cache_path(self.ARGS["name"], self.ARGS["scale_down"],
+                                  self.ARGS["seed"], str(tmp_path))
+        with open(os.path.join(path, "dst.bin"), "r+b") as f:
+            f.write(b"\xde\xad\xbe\xef")
+        g = make_dataset(cache_dir=str(tmp_path), **self.ARGS)
+        _assert_graphs_equal(
+            make_dataset(self.ARGS["name"], self.ARGS["scale_down"]), g)
+
+    def test_env_var_routes_cache(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_DATASET_CACHE", str(tmp_path))
+        make_dataset(self.ARGS["name"], self.ARGS["scale_down"])
+        assert is_store(dataset_cache_path(
+            self.ARGS["name"], self.ARGS["scale_down"], 0, str(tmp_path)))
+
+
+def test_bfs_occupancy_beats_random():
+    g = make_dataset("socEpinions1", scale_down=64.0)
+    occ = {}
+    for kind in ("random", "bfs"):
+        h = permute_graph(g, compute_order(g, kind, seed=1))
+        occ[kind] = blocked_tile_stats(h)["occupancy"]
+    assert occ["bfs"] > occ["random"], occ
