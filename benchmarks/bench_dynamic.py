@@ -1,0 +1,155 @@
+"""Dynamic-update benchmark: staleness-vs-cost of incremental repair.
+
+Streams batches of edge updates through :class:`repro.core.dynamic.
+IncrementalPageRank` and measures what each batch cost (update+repair wall
+time, push volume, fraction of vertices touched) and what it bought (the
+a-posteriori L1 certificate, plus a final exact L1 against a float64
+full-rebuild oracle) — against the cost of a cold full recompute of the
+same variant on the final graph.
+
+Two scenarios bracket the locality spectrum:
+
+* ``random`` — uniform adds/deletes: perturbations land on well-connected
+  vertices and the repair cascade goes wide (the worst case the fallback
+  path exists for).
+* ``localized`` — sink-bounded updates (dangling→dangling adds, deletes of
+  degree-1→sink edges): the cascade dies one hop out, so repair cost stays
+  proportional to the batch, not the graph.  The run asserts the repair
+  touches <10% of vertices here — the acceptance bar recorded in
+  BENCH_dynamic.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_dynamic --scale 14 \
+        --ops 1000 --json BENCH_dynamic.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.dynamic import IncrementalPageRank, random_update_batch
+from repro.core.solver import solve_variant
+from repro.graphs import rmat_graph
+
+LOCALIZED_TOUCHED_MAX = 0.10  # acceptance bar: repair locality on sink-bounded updates
+
+
+def bench_scenario(g, scenario: str, *, ops: int, batches: int, tol: float,
+                   variant: str, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    ipr = IncrementalPageRank(g, variant=variant, tol=tol)
+    per = max(1, ops // max(batches, 1))
+    upd: list[dict] = []
+    applied = 0
+    while applied < ops:
+        adds, dels = random_update_batch(
+            ipr.g, rng, min(per, ops - applied),
+            localized=(scenario == "localized"))
+        if adds is None and dels is None:
+            break  # candidate pool exhausted (localized streams can dry up)
+        t0 = time.perf_counter()
+        rep = ipr.apply(adds=adds, dels=dels)
+        dt = time.perf_counter() - t0
+        assert rep.converged, f"{scenario}: certificate not met: {rep}"
+        applied += rep.num_ops
+        upd.append({
+            "ops": rep.num_ops, "mode": rep.mode, "wall_s": dt,
+            "rounds": rep.rounds, "pushes": rep.pushes,
+            "touched_frac": rep.touched_frac, "l1_cert": rep.l1_cert,
+            "plan_action": rep.plan_action,
+        })
+
+    # cost baseline: a cold full rebuild + solve of the same variant on the
+    # final graph — what every batch would have paid without the repair path
+    t0 = time.perf_counter()
+    solve_variant(variant, ipr.g, threshold=tol, max_iter=100_000)
+    full_s = time.perf_counter() - t0
+
+    # exactness: float64 full-rebuild oracle on the final graph
+    oracle = np.asarray(
+        solve_variant("sequential", ipr.g, threshold=1e-13,
+                      max_iter=200_000).pr, np.float64)
+    l1_final = float(np.abs(ipr.pagerank - oracle).sum())
+    assert l1_final < 1e-6, f"{scenario}: L1 vs oracle {l1_final:.2e}"
+
+    walls = np.asarray([u["wall_s"] for u in upd])
+    touched = np.asarray([u["touched_frac"] for u in upd])
+    rec = {
+        "scenario": scenario,
+        "ops_applied": applied,
+        "batches": len(upd),
+        "push_batches": sum(u["mode"] == "push" for u in upd),
+        "fallback_batches": sum(u["mode"] == "fallback" for u in upd),
+        "mean_update_s": float(walls.mean()) if len(upd) else 0.0,
+        "total_update_s": float(walls.sum()),
+        "full_recompute_s": full_s,
+        "total_pushes": int(sum(u["pushes"] for u in upd)),
+        "mean_touched_frac": float(touched.mean()) if len(upd) else 0.0,
+        "max_touched_frac": float(touched.max()) if len(upd) else 0.0,
+        "max_l1_cert": max((u["l1_cert"] for u in upd), default=0.0),
+        "l1_vs_oracle": l1_final,
+        "updates": upd,
+    }
+    if scenario == "localized" and upd:
+        assert rec["mean_touched_frac"] < LOCALIZED_TOUCHED_MAX, (
+            f"localized repair touched {rec['mean_touched_frac']:.1%} "
+            f"of vertices (bar: {LOCALIZED_TOUCHED_MAX:.0%})")
+    return rec
+
+
+def bench(scale: int = 14, avg_degree: int = 8, ops: int = 1000,
+          batches: int = 8, tol: float = 1e-8, variant: str = "sequential",
+          seed: int = 0) -> dict:
+    g = rmat_graph(scale, avg_degree=avg_degree, seed=seed)
+    scenarios = {
+        s: bench_scenario(g, s, ops=ops, batches=batches, tol=tol,
+                          variant=variant, seed=seed)
+        for s in ("localized", "random")
+    }
+    return {
+        "n": g.n, "m": g.m, "scale": scale, "avg_degree": avg_degree,
+        "variant": variant, "tol": tol, "ops": ops, "batches": batches,
+        "localized_touched_max": LOCALIZED_TOUCHED_MAX,
+        "scenarios": scenarios,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=14, help="RMAT log2(n)")
+    ap.add_argument("--avg-degree", type=int, default=8)
+    ap.add_argument("--ops", type=int, default=1000,
+                    help="edge updates per scenario")
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--tol", type=float, default=1e-8,
+                    help="L1 certificate target per batch")
+    ap.add_argument("--variant", default="sequential",
+                    help="initial-solve / fallback registry variant")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write the record as JSON")
+    args = ap.parse_args(argv)
+
+    rec = bench(scale=args.scale, avg_degree=args.avg_degree, ops=args.ops,
+                batches=args.batches, tol=args.tol, variant=args.variant,
+                seed=args.seed)
+    for s, r in rec["scenarios"].items():
+        speedup = (r["full_recompute_s"] / r["mean_update_s"]
+                   if r["mean_update_s"] else float("inf"))
+        print(f"dynamic[{s}] n={rec['n']} m={rec['m']} "
+              f"ops={r['ops_applied']} batches={r['batches']} "
+              f"(push={r['push_batches']} fallback={r['fallback_batches']}): "
+              f"update={r['mean_update_s'] * 1e3:.1f}ms vs "
+              f"full={r['full_recompute_s'] * 1e3:.1f}ms ({speedup:.1f}x)  "
+              f"touched={r['mean_touched_frac']:.3f} "
+              f"cert={r['max_l1_cert']:.2e} L1={r['l1_vs_oracle']:.2e}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

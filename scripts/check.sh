@@ -103,6 +103,12 @@ echo "== perf: BENCH_build.json (per-stage wall + peak RSS, scale 14) =="
 python -m benchmarks.bench_build --scale 14 --chunk-edges 32768 --threads 8 \
     --json BENCH_build.json
 
+echo "== smoke+perf: BENCH_dynamic.json (1k updates on scale-14, L1 certificate vs oracle) =="
+# bench_scenario asserts the certificate per batch, L1<1e-6 vs the float64
+# full-rebuild oracle, and <10% vertices touched on the localized stream
+python -m benchmarks.bench_dynamic --scale 14 --ops 1000 --batches 8 \
+    --json BENCH_dynamic.json
+
 echo "== docs smoke: registry <-> README table + docs/*.md code references =="
 python scripts/docs_check.py
 

@@ -242,6 +242,7 @@ def pagerank_numpy(
     threshold: float = 1e-12,
     max_iter: int = 10_000,
     handle_dangling: bool = False,
+    pr0: np.ndarray | None = None,
 ) -> tuple[np.ndarray, int]:
     """Sequential Jacobi PageRank — the paper's baseline & Lemma-2 reference.
 
@@ -250,12 +251,18 @@ def pagerank_numpy(
     scaled per vertex — ``pr = base·bias + d·Σ w·pr(src)/outdeg(src)`` —
     which is the fixed point every registered variant must reproduce on
     weighted graphs (asserted by the tests/test_weighted.py property tier).
+
+    ``pr0`` seeds the iteration (default uniform ``1/n``); the fixed point is
+    start-independent, so a warm start — e.g. the previous fixed point after
+    a small graph update, via :func:`repro.core.solver.warm_start_pr` — only
+    changes the iteration count.
     """
     n = g.n
     inv_out = np.where(g.out_degree > 0, 1.0 / np.maximum(g.out_degree, 1), 0.0)
     base = (1.0 - d) / n
     base_vec = base if g.bias is None else base * g.bias
-    pr = np.full(n, 1.0 / n)
+    pr = (np.full(n, 1.0 / n) if pr0 is None
+          else np.asarray(pr0, dtype=np.float64).copy())
     for it in range(1, max_iter + 1):
         contrib = (pr * inv_out)[g.src]
         if g.weights is not None:
@@ -285,7 +292,7 @@ def l1_norm(pr_a, pr_b) -> float:
 @functools.partial(
     jax.jit, static_argnames=("n", "max_iter", "handle_dangling", "perforate")
 )
-def _barrier_impl(src, dst, inv_out, dangling, weights, bias,
+def _barrier_impl(src, dst, inv_out, dangling, weights, bias, warm,
                   *, n, d, threshold, max_iter, handle_dangling, perforate):
     dtype = inv_out.dtype
     base = jnp.asarray((1.0 - d) / n, dtype)
@@ -305,9 +312,16 @@ def _barrier_impl(src, dst, inv_out, dangling, weights, bias,
 
     transforms = (perforation(threshold),) if perforate else ()
     step = barrier_schedule(sweep, transforms)
-    pr0 = jnp.full((n,), 1.0 / n, dtype)
+    # warm=None is an empty pytree: the cold path traces exactly as before
+    pr0 = jnp.full((n,), 1.0 / n, dtype) if warm is None else warm
     return solve(step, pr0, threshold=threshold, max_iter=max_iter,
                  track_frozen=perforate)
+
+
+def _warm_operand(pr0, dtype):
+    """Warm-start vector as a jit operand (``None`` stays ``None`` — an
+    empty pytree, so cold solves keep their cache entry and trace)."""
+    return None if pr0 is None else jnp.asarray(np.asarray(pr0), dtype)
 
 
 def pagerank_barrier(
@@ -316,9 +330,11 @@ def pagerank_barrier(
     threshold: float = 1e-8,
     max_iter: int = 10_000,
     handle_dangling: bool = False,
+    pr0=None,
 ) -> PageRankResult:
     return _barrier_impl(
         dg.src, dg.dst, dg.inv_out, dg.dangling, dg.weights, dg.bias,
+        _warm_operand(pr0, dg.inv_out.dtype),
         n=dg.n, d=d, threshold=threshold, max_iter=max_iter,
         handle_dangling=handle_dangling, perforate=False,
     )
@@ -330,9 +346,11 @@ def pagerank_barrier_opt(
     threshold: float = 1e-8,
     max_iter: int = 10_000,
     handle_dangling: bool = False,
+    pr0=None,
 ) -> PageRankResult:
     return _barrier_impl(
         dg.src, dg.dst, dg.inv_out, dg.dangling, dg.weights, dg.bias,
+        _warm_operand(pr0, dg.inv_out.dtype),
         n=dg.n, d=d, threshold=threshold, max_iter=max_iter,
         handle_dangling=handle_dangling, perforate=True,
     )
@@ -345,7 +363,8 @@ def pagerank_barrier_opt(
 
 @functools.partial(jax.jit, static_argnames=("n", "m", "max_iter", "handle_dangling"))
 def _barrier_edge_impl(src_by_src, edge_slot, dst, inv_out, dangling, weights,
-                       bias, *, n, m, d, threshold, max_iter, handle_dangling):
+                       bias, warm, *, n, m, d, threshold, max_iter,
+                       handle_dangling):
     dtype = inv_out.dtype
     base = jnp.asarray((1.0 - d) / n, dtype)
     base_vec = base if bias is None else base * bias
@@ -366,7 +385,7 @@ def _barrier_edge_impl(src_by_src, edge_slot, dst, inv_out, dangling, weights,
         return new
 
     step = barrier_schedule(sweep)
-    pr0 = jnp.full((n,), 1.0 / n, dtype)
+    pr0 = jnp.full((n,), 1.0 / n, dtype) if warm is None else warm
     return solve(step, pr0, threshold=threshold, max_iter=max_iter)
 
 
@@ -376,10 +395,11 @@ def pagerank_barrier_edge(
     threshold: float = 1e-8,
     max_iter: int = 10_000,
     handle_dangling: bool = False,
+    pr0=None,
 ) -> PageRankResult:
     return _barrier_edge_impl(
         eg.src_by_src, eg.edge_slot, eg.dst, eg.inv_out, eg.dangling,
-        eg.weights, eg.bias,
+        eg.weights, eg.bias, _warm_operand(pr0, eg.inv_out.dtype),
         n=eg.n, m=eg.m, d=d, threshold=threshold, max_iter=max_iter,
         handle_dangling=handle_dangling,
     )
@@ -396,7 +416,7 @@ def pagerank_barrier_edge(
                      "thread_level", "handle_dangling"),
 )
 def _nosync_impl(
-    src_pad, dst_local, emask, inv_out, dangling, bias_pad,
+    src_pad, dst_local, emask, inv_out, dangling, bias_pad, warm,
     *, n, p, vp, n_pad, d, threshold, max_iter, perforate, thread_level,
     handle_dangling,
 ):
@@ -430,7 +450,7 @@ def _nosync_impl(
         transforms=transforms, thread_level=thread_level,
         prologue=dangling_mass,
     )
-    pr0 = jnp.full((n_pad,), 1.0 / n, dtype)
+    pr0 = jnp.full((n_pad,), 1.0 / n, dtype) if warm is None else warm
     r = solve(step, pr0, n_units=p, threshold=threshold, max_iter=max_iter,
               track_frozen=perforate)
     return PageRankResult(r.pr[:n], r.iterations, r.err, r.residuals)
@@ -444,10 +464,18 @@ def pagerank_nosync(
     perforate: bool = False,
     thread_level: bool = True,
     handle_dangling: bool = False,
+    pr0=None,
 ) -> PageRankResult:
+    warm = None
+    if pr0 is not None:
+        # padding slots start at 0; their first sweep writes base + dmass
+        # (they have no in-edges) and they are sliced off on return anyway
+        padded = np.zeros(pg.n_pad, dtype=np.float64)
+        padded[:pg.n] = np.asarray(pr0)
+        warm = jnp.asarray(padded, pg.inv_out.dtype)
     return _nosync_impl(
         pg.src_pad, pg.dst_local, pg.edge_mult, pg.inv_out, pg.dangling,
-        pg.bias_pad,
+        pg.bias_pad, warm,
         n=pg.n, p=pg.p, vp=pg.vp, n_pad=pg.n_pad,
         d=d, threshold=threshold, max_iter=max_iter,
         perforate=perforate, thread_level=thread_level,
@@ -510,7 +538,8 @@ class IdenticalNodePlan:
     jax.jit, static_argnames=("n", "n_classes", "max_iter", "handle_dangling")
 )
 def _identical_impl(cls_of, src, dst_class, inv_out, dangling, weights, bias,
-                    *, n, n_classes, d, threshold, max_iter, handle_dangling):
+                    warm, *, n, n_classes, d, threshold, max_iter,
+                    handle_dangling):
     dtype = inv_out.dtype
     base = jnp.asarray((1.0 - d) / n, dtype)
     base_vec = base if bias is None else base * bias
@@ -528,7 +557,7 @@ def _identical_impl(cls_of, src, dst_class, inv_out, dangling, weights, bias,
         return new
 
     step = barrier_schedule(sweep)
-    pr0 = jnp.full((n,), 1.0 / n, dtype)
+    pr0 = jnp.full((n,), 1.0 / n, dtype) if warm is None else warm
     return solve(step, pr0, threshold=threshold, max_iter=max_iter)
 
 
@@ -538,10 +567,11 @@ def pagerank_identical(
     threshold: float = 1e-8,
     max_iter: int = 10_000,
     handle_dangling: bool = False,
+    pr0=None,
 ) -> PageRankResult:
     return _identical_impl(
         plan.cls_of, plan.src, plan.dst_class, plan.inv_out, plan.dangling,
-        plan.weights, plan.bias,
+        plan.weights, plan.bias, _warm_operand(pr0, plan.inv_out.dtype),
         n=plan.n, n_classes=plan.n_classes, d=d, threshold=threshold,
         max_iter=max_iter, handle_dangling=handle_dangling,
     )
@@ -553,8 +583,10 @@ def pagerank_identical(
 
 
 def _run_kw(kw: dict) -> dict:
-    """Solver kwargs every run fn understands (drops build-only opts)."""
-    return {k: kw[k] for k in ("d", "threshold", "max_iter", "handle_dangling")
+    """Solver kwargs every run fn understands (drops build-only opts).
+    ``pr0`` (the warm-start transport option) rides along when given."""
+    return {k: kw[k] for k in ("d", "threshold", "max_iter", "handle_dangling",
+                               "pr0")
             if k in kw}
 
 

@@ -354,10 +354,55 @@ SCHEDULES = frozenset({"barrier", "nosync", "sequential"})
 # (exchange staleness and top-k collective perforation); the coordination
 # ``mode`` is baked into the registry name (``distributed_barrier`` vs
 # ``distributed_stale``) so it is never a silently-ignored option.
+# ``pr0`` is the warm-start vector (an ``(n,)`` float array seeding the
+# iteration instead of uniform 1/n): uniquely among transport options it is
+# *best-effort by construction* — a warm start can change the iteration
+# count but never the fixed point (Lemma 2 again), so a variant that ignores
+# it stays correct, merely cold.
 _TRANSPORT_OPTS = frozenset(
     {"threads", "block", "tile_cap", "interpret", "local_sweeps",
-     "send_fraction"}
+     "send_fraction", "pr0"}
 )
+
+
+def warm_start_pr(g, prev_pr, *, d: float = DEFAULT_DAMPING,
+                  handle_dangling: bool = False) -> np.ndarray:
+    """Warm-start seed for :func:`solve_variant` after a graph update: one
+    exact float64 sweep of ``g`` applied to the stale fixed point.
+
+    ``prev_pr`` is the converged rank vector of the *pre-update* graph.  One
+    power-iteration step through the **new** graph re-normalizes everything a
+    structural update perturbs — contributions now divide by the new
+    out-degrees, mass routed through deleted edges stops flowing, newly
+    dangling vertices stop contributing (or, under ``handle_dangling``, their
+    mass is re-spread uniformly) — so the seed already satisfies the new
+    sweep's local balance around every changed vertex.  Kollias et al.'s
+    asynchronous-iteration analysis (PAPERS.md) is what makes this sound:
+    the fixed point is independent of the starting vector, so warm starts
+    buy iterations, never correctness.
+
+    Works on any :class:`repro.graphs.csr.Graph`-shaped object (plain
+    attribute access; memmap-backed graphs included).
+    """
+    n = int(g.n)
+    prev = np.asarray(prev_pr, dtype=np.float64)
+    if prev.shape != (n,):
+        raise ValueError(f"prev_pr must have shape ({n},), got {prev.shape}")
+    if n == 0:
+        return prev.copy()
+    out_degree = np.asarray(g.out_degree)
+    inv_out = np.where(out_degree > 0, 1.0 / np.maximum(out_degree, 1), 0.0)
+    contrib = (prev * inv_out)[np.asarray(g.src)]
+    if g.weights is not None:
+        contrib = contrib * np.asarray(g.weights)
+    acc = np.zeros(n, dtype=np.float64)
+    np.add.at(acc, np.asarray(g.dst), contrib)
+    base = (1.0 - d) / n
+    base_vec = base if g.bias is None else base * np.asarray(g.bias)
+    new = base_vec + d * acc
+    if handle_dangling:
+        new = new + d * prev[out_degree == 0].sum() / n
+    return new
 
 
 def register_variant(name: str, build: Callable, run: Callable,
@@ -551,6 +596,7 @@ def plan_run(
     threshold: float = 1e-8,
     max_iter: int = 10_000,
     handle_dangling: bool = False,
+    pr0=None,
     **opts,
 ) -> PageRankResult:
     """Run fn of every plan-staged variant: inner solve + reconstruction.
@@ -568,6 +614,11 @@ def plan_run(
     ``d`` different from the plan's re-plans and rebuilds the inner bundle
     first — correctness over cache: the stale bundle would silently solve a
     different graph.
+
+    A full-length warm start ``pr0`` is restricted to the core and rescaled
+    to the core solve's own ``(1-d)/n_core`` base (the inverse of the
+    ``core_pr · n_core / n`` restoration in ``reconstruct``) before being
+    handed to the inner variant.
     """
     if b.plan.d_dependent and not np.isclose(d, b.plan.d):
         plan_opts = dict(b.plan_opts)
@@ -583,6 +634,13 @@ def plan_run(
         it, err, residuals = np.asarray(0, np.int32), np.asarray(0.0), None
         core_pr = np.zeros(0, dtype=np.float64)
     else:
+        if pr0 is not None:
+            core_n = int(b.plan.core.n)
+            pr0 = np.asarray(pr0, dtype=np.float64)
+            if pr0.shape != (b.plan.n,):
+                raise ValueError(
+                    f"pr0 must be full-length ({b.plan.n},), got {pr0.shape}")
+            opts = dict(opts, pr0=pr0[b.plan.core_index] * (b.plan.n / core_n))
         r = b.inner.run(b.bundle, d=d, threshold=threshold, max_iter=max_iter,
                         handle_dangling=False, **opts)
         it, err, residuals = r.iterations, r.err, r.residuals

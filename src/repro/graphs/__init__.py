@@ -1,9 +1,11 @@
 from repro.graphs.csr import (
     Graph,
+    GraphDelta,
     BlockedCOO,
     DecompositionPlan,
     build_blocked_coo,
     blocked_tile_stats,
+    patch_blocked_coo,
 )
 from repro.graphs.rmat import rmat_graph, rmat_edge_chunks
 from repro.graphs.datasets import DATASETS, make_dataset
@@ -26,10 +28,12 @@ from repro.graphs.reorder import (
 
 __all__ = [
     "Graph",
+    "GraphDelta",
     "BlockedCOO",
     "DecompositionPlan",
     "build_blocked_coo",
     "blocked_tile_stats",
+    "patch_blocked_coo",
     "rmat_graph",
     "rmat_edge_chunks",
     "DATASETS",

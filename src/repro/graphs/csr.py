@@ -33,6 +33,59 @@ import numpy as np
 _DEFAULT_DAMPING = 0.85
 
 
+def _update_pairs(pairs, name: str, n: int) -> np.ndarray:
+    """Validate one :meth:`Graph.apply_updates` operand into ``(k, 2)`` int64
+    ``(src, dst)`` rows; ``None``/empty become a zero-row array."""
+    if pairs is None:
+        return np.zeros((0, 2), dtype=np.int64)
+    arr = np.asarray(pairs, dtype=np.int64)
+    if arr.size == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    if arr.ndim != 2 or arr.shape[1] != 2:
+        raise ValueError(f"{name} must be a (k, 2) array of (src, dst) pairs")
+    if arr.min() < 0 or arr.max() >= n:
+        raise ValueError(f"{name} endpoint out of range [0, {n})")
+    return arr
+
+
+@dataclasses.dataclass
+class GraphDelta:
+    """Record of one :meth:`Graph.apply_updates` batch.
+
+    Everything an incremental consumer needs to localize its repair work:
+    the applied edge lists (in the canonical dst-major order they were merged
+    in), the vertices whose out-/in-edge sets changed, and the dangling-status
+    transitions (a vertex losing its last out-edge changes the walk matrix's
+    column to zero — the delta-push corrector and the warm-start renormalizer
+    both key off these).  ``touched_dst_blocks`` names the dst blocks of a
+    :class:`BlockedCOO` layout whose tiles :func:`patch_blocked_coo` must
+    rebuild — and, symmetrically, the blocks a serving cache must invalidate.
+    """
+
+    n: int
+    added: np.ndarray  # (ka, 2) int64 (src, dst), dst-major applied order
+    deleted: np.ndarray  # (kd, 2) int64, dst-major applied order
+    added_weights: Optional[np.ndarray]  # (ka,) float64; None when unweighted
+    touched_src: np.ndarray  # unique vertices whose out-edge set changed
+    touched_dst: np.ndarray  # unique vertices whose in-edge set changed
+    newly_dangling: np.ndarray  # out-degree dropped >0 -> 0
+    undangled: np.ndarray  # out-degree rose 0 -> >0
+
+    @property
+    def num_ops(self) -> int:
+        return int(self.added.shape[0] + self.deleted.shape[0])
+
+    def touched_vertices(self) -> np.ndarray:
+        """Unique vertices appearing as either endpoint of any update."""
+        return np.unique(np.r_[self.touched_src, self.touched_dst])
+
+    def touched_dst_blocks(self, block: int) -> np.ndarray:
+        """Sorted unique dst blocks (width ``block``) the updates landed in."""
+        if self.touched_dst.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        return np.unique(self.touched_dst // block)
+
+
 def _concat_ranges(ptr: np.ndarray, verts: np.ndarray) -> np.ndarray:
     """Concatenated CSR index ranges ``ptr[v]:ptr[v+1]`` for each v in verts.
 
@@ -298,6 +351,152 @@ class Graph:
         bounds[0], bounds[-1] = 0, self.n
         return np.maximum.accumulate(bounds).astype(np.int64)
 
+    def apply_updates(
+        self,
+        adds=None,
+        dels=None,
+        add_weights: Optional[np.ndarray] = None,
+    ) -> tuple["Graph", "GraphDelta"]:
+        """Apply an edge-update batch and return ``(new_graph, delta)``.
+
+        ``adds``/``dels`` are ``(k, 2)`` arrays of ``(src, dst)`` pairs over
+        the *existing* vertex set (``n`` never changes — vertex-set growth is
+        a rebuild, edge churn is not).  The derived state is re-derived
+        **incrementally**, never from scratch: the dst-sorted edge arrays are
+        patched by one O(m+k) merge (delete positions located by binary
+        search, insert positions by binary search into the survivors),
+        ``out_degree`` and ``in_ptr`` are adjusted by per-endpoint deltas, and
+        ``bias`` is carried through untouched.  ``self`` is left unmodified
+        (untouched arrays may be shared with the result, so treat graphs as
+        immutable as ever); memmap-backed graphs work — touched ranges are
+        materialized, the rest stays on disk.
+
+        Semantics, enforced rather than guessed:
+
+        * deletions are applied first, then additions — so a batch may delete
+          an edge and re-add it (a weight update, on weighted graphs);
+        * deleting an edge that does not exist **raises** (``ValueError``),
+          as does deleting the same edge twice in one batch — a silent no-op
+          would desynchronize every incremental consumer downstream;
+        * adding an edge twice in one batch raises; adding an edge that
+          already exists (and survives the batch's deletions) raises on
+          unweighted graphs — unweighted parallel edges would silently
+          double-count.  Weighted graphs permit parallel edges (the STIC-D
+          contraction emits them legitimately); deletion then removes the
+          first of the parallel copies in canonical order;
+        * ``add_weights`` (per added edge, default all-ones) is only accepted
+          on weighted graphs.
+
+        The returned :class:`GraphDelta` records exactly what changed —
+        including vertices that became dangling (last out-edge deleted) or
+        stopped being dangling — so repair passes, layout patching
+        (:func:`patch_blocked_coo`), and plan invalidation
+        (:meth:`DecompositionPlan.touched_by`) can all localize their work.
+        """
+        n = self.n
+        adds_a = _update_pairs(adds, "adds", n)
+        dels_a = _update_pairs(dels, "dels", n)
+        if add_weights is not None:
+            if self.weights is None:
+                raise ValueError(
+                    "add_weights given but the graph is unweighted")
+            add_w = np.asarray(add_weights, dtype=np.float64)
+            if add_w.shape != (adds_a.shape[0],):
+                raise ValueError(
+                    f"add_weights must have shape ({adds_a.shape[0]},), "
+                    f"got {add_w.shape}")
+        elif self.weights is not None:
+            add_w = np.ones(adds_a.shape[0], dtype=np.float64)
+        else:
+            add_w = None
+
+        src = np.asarray(self.src)
+        dst = np.asarray(self.dst)
+        m = int(src.shape[0])
+        # dst-major edge key: ascending in the canonical (dst, then src) sort
+        key = dst.astype(np.int64) * n + src
+
+        # --- deletions: locate each edge by binary search, verify, mask ---
+        del_order = np.argsort(dels_a[:, 1] * n + dels_a[:, 0], kind="stable")
+        dels_s = dels_a[del_order]
+        dk = dels_s[:, 1] * n + dels_s[:, 0]
+        if dk.size and np.any(dk[1:] == dk[:-1]):
+            i = int(np.flatnonzero(dk[1:] == dk[:-1])[0])
+            raise ValueError(
+                f"duplicate delete of edge ({int(dels_s[i, 0])} -> "
+                f"{int(dels_s[i, 1])}) in one batch")
+        keep = np.ones(m, dtype=bool)
+        if dk.size:
+            if m == 0:
+                raise ValueError(
+                    f"cannot delete nonexistent edge ({int(dels_s[0, 0])} -> "
+                    f"{int(dels_s[0, 1])})")
+            pos = np.searchsorted(key, dk)
+            ok = (pos < m) & (key[np.minimum(pos, m - 1)] == dk)
+            if not np.all(ok):
+                i = int(np.flatnonzero(~ok)[0])
+                raise ValueError(
+                    f"cannot delete nonexistent edge ({int(dels_s[i, 0])} -> "
+                    f"{int(dels_s[i, 1])})")
+            keep[pos] = False
+
+        # --- additions: dedupe-check, then one sorted merge-insert ---
+        add_order = np.argsort(adds_a[:, 1] * n + adds_a[:, 0], kind="stable")
+        adds_s = adds_a[add_order]
+        ak = adds_s[:, 1] * n + adds_s[:, 0]
+        if ak.size and np.any(ak[1:] == ak[:-1]):
+            i = int(np.flatnonzero(ak[1:] == ak[:-1])[0])
+            raise ValueError(
+                f"duplicate add of edge ({int(adds_s[i, 0])} -> "
+                f"{int(adds_s[i, 1])}) in one batch")
+        key_kept = key[keep]
+        if ak.size and self.weights is None and key_kept.size:
+            p = np.searchsorted(key_kept, ak)
+            exists = (p < key_kept.size) \
+                & (key_kept[np.minimum(p, key_kept.size - 1)] == ak)
+            if np.any(exists):
+                i = int(np.flatnonzero(exists)[0])
+                raise ValueError(
+                    f"duplicate add: edge ({int(adds_s[i, 0])} -> "
+                    f"{int(adds_s[i, 1])}) already present (unweighted "
+                    f"graphs reject parallel edges)")
+        ins = np.searchsorted(key_kept, ak)
+        new_src = np.insert(src[keep], ins, adds_s[:, 0].astype(src.dtype))
+        new_dst = np.insert(dst[keep], ins, adds_s[:, 1].astype(dst.dtype))
+        new_w = None
+        if self.weights is not None:
+            w = np.asarray(self.weights)
+            new_w = np.insert(w[keep], ins, add_w[add_order])
+
+        # --- derived state: per-endpoint count deltas, not a recount ---
+        old_out = np.asarray(self.out_degree)
+        new_out = old_out.astype(np.int32, copy=True)
+        np.subtract.at(new_out, dels_a[:, 0], 1)
+        np.add.at(new_out, adds_a[:, 0], 1)
+        in_counts = np.diff(np.asarray(self.in_ptr))
+        np.subtract.at(in_counts, dels_a[:, 1], 1)
+        np.add.at(in_counts, adds_a[:, 1], 1)
+        in_ptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(in_counts, out=in_ptr[1:])
+
+        touched_src = np.unique(np.r_[adds_a[:, 0], dels_a[:, 0]])
+        touched_dst = np.unique(np.r_[adds_a[:, 1], dels_a[:, 1]])
+        delta = GraphDelta(
+            n=n,
+            added=adds_s,
+            deleted=dels_s,
+            added_weights=None if add_w is None else add_w[add_order],
+            touched_src=touched_src,
+            touched_dst=touched_dst,
+            newly_dangling=touched_src[(old_out[touched_src] > 0)
+                                       & (new_out[touched_src] == 0)],
+            undangled=touched_src[(old_out[touched_src] == 0)
+                                  & (new_out[touched_src] > 0)],
+        )
+        g_new = Graph(n=n, src=new_src, dst=new_dst, out_degree=new_out,
+                      in_ptr=in_ptr, weights=new_w, bias=self.bias)
+        return g_new, delta
+
 
 def inv_out_and_dangling(out_degree: np.ndarray, n_pad: Optional[int] = None):
     """``(inv_out, dangling)`` float64 host arrays shared by every device
@@ -393,6 +592,63 @@ class DecompositionPlan:
         out = self.struct_pruned.copy()
         out[self.ident_members] = True
         return out
+
+    def touched_by(self, delta: "GraphDelta") -> bool:
+        """True when an update batch invalidates this plan's baked analyses
+        and it must be re-planned (:meth:`from_graph`) instead of patched.
+
+        The rule: an endpoint of any added/deleted edge lands on a **pruned
+        vertex** or an **identical-class representative**.  Those are exactly
+        the cases where a closed form the plan relies on can break — a chain
+        vertex gaining a second in-edge, a dead vertex gaining an escape
+        edge, a representative's in-set or out-degree diverging from its
+        members'.  Updates confined to ordinary core vertices are always safe
+        to :meth:`patched` in place: added edges only *raise* core degrees
+        (never creating new chains at their endpoints), deleted edges can at
+        worst leave a core vertex that *could now* be pruned — a missed
+        optimization, not an error — and every core contribution divides by
+        the patched full-graph out-degree, so head-degree changes stay exact.
+        """
+        if delta.num_ops == 0:
+            return False
+        hot = self.pruned  # fresh copy (property)
+        hot[self.ident_reps] = True
+        return bool(hot[delta.touched_vertices()].any())
+
+    def patched(self, g_new: Graph, delta: "GraphDelta") -> "DecompositionPlan":
+        """Same analyses, updated graphs — the cheap path when
+        :meth:`touched_by` is False (raises otherwise).
+
+        The full graph is swapped for ``g_new`` (reconstruction always reads
+        it fresh) and the update batch is replayed on the **core**: every
+        endpoint is a core vertex (guaranteed by the ``touched_by`` gate), so
+        each edge maps through ``full_to_core`` one-to-one and the core's
+        retained full-graph out-degrees shift by the same ±1 as the full
+        graph's.  Chain/dead/identical masks, contracted edges, and bias
+        folds are all untouched — that is the point: re-baking them is the
+        expensive O(n) analysis this method exists to skip.
+        """
+        if self.touched_by(delta):
+            raise ValueError(
+                "update touches a pruned vertex or identical-class "
+                "representative; re-plan with DecompositionPlan.from_graph")
+        if delta.num_ops == 0:
+            return dataclasses.replace(self, full=g_new)
+        def to_core(pairs: np.ndarray) -> np.ndarray:
+            mapped = self.full_to_core[pairs]
+            assert mapped.min() >= 0 if mapped.size else True
+            return mapped
+        core_adds = to_core(delta.added)
+        core_dels = to_core(delta.deleted)
+        add_w = delta.added_weights
+        if self.core.weights is not None and add_w is None:
+            add_w = np.ones(core_adds.shape[0], dtype=np.float64)
+        core_new, _ = self.core.apply_updates(
+            core_adds if core_adds.size else None,
+            core_dels if core_dels.size else None,
+            add_weights=add_w if self.core.weights is not None else None,
+        )
+        return dataclasses.replace(self, core=core_new, full=g_new)
 
     @classmethod
     def from_graph(cls, g: Graph, identical: bool = True, chains: bool = True,
@@ -847,4 +1103,112 @@ def build_blocked_coo(g: Graph, block: int = 512, tile_cap: int = 2048) -> Block
         tile_src_block=np.asarray(t_sb, dtype=np.int32),
         tile_dst_block=np.asarray(t_db, dtype=np.int32),
         tiles_weight=np.stack(tiles_wt) if weighted else None,
+    )
+
+
+def patch_blocked_coo(coo: BlockedCOO, g: Graph,
+                      delta: GraphDelta) -> BlockedCOO:
+    """Patch a built :class:`BlockedCOO` after :meth:`Graph.apply_updates`:
+    rebuild only the tiles of dst blocks the delta touched, keep every other
+    tile verbatim.
+
+    ``g`` is the post-update graph and ``delta`` the record the update
+    returned.  The result is **array-identical** to a full
+    :func:`build_blocked_coo` of ``g`` (tests assert equality, not closeness):
+    a dst block's edges are one contiguous slice of the dst-sorted arrays, so
+    untouched blocks' tiles cannot have changed, and within a touched block
+    the tiles are re-emitted in the same src-block-major order (plus the
+    same coverage tile when the block went empty) the full build uses.
+    Work is O(edges in touched blocks + total tiles), independent of ``m``
+    for localized updates.
+    """
+    if g.n != coo.n:
+        raise ValueError(
+            f"apply_updates never changes n: layout has n={coo.n}, "
+            f"graph has n={g.n}")
+    weighted = g.weights is not None
+    if weighted != (coo.tiles_weight is not None):
+        raise ValueError(
+            "graph and layout disagree on weightedness; rebuild the layout")
+    block = coo.block
+    n_blocks = coo.n_blocks
+    touched = delta.touched_dst_blocks(block)
+    if touched.size == 0 or n_blocks == 0:
+        return coo
+    tile_cap = int(coo.tiles_src_local.shape[1])
+    keep = ~np.isin(np.asarray(coo.tile_dst_block), touched)
+
+    new_src, new_dst, new_val, new_wt = [], [], [], []
+    new_sb, new_db = [], []
+    for dblk in touched:
+        lo = int(g.in_ptr[dblk * block])
+        hi = int(g.in_ptr[min((dblk + 1) * block, g.n)])
+        src_s = np.asarray(g.src[lo:hi])
+        dst_s = np.asarray(g.dst[lo:hi])
+        w_s = np.asarray(g.weights[lo:hi]) if weighted else None
+        sb = src_s // block
+        # stable sort by src block == the full build's global stable bucket
+        # sort restricted to this dst block (bucket id is dst-block-major)
+        order = np.argsort(sb, kind="stable")
+        src_s, dst_s, sb = src_s[order], dst_s[order], sb[order]
+        if weighted:
+            w_s = w_s[order].astype(np.float32)
+        if sb.size:
+            starts = np.flatnonzero(np.r_[True, sb[1:] != sb[:-1]])
+        else:
+            starts = np.zeros(0, dtype=np.int64)
+        ends = np.r_[starts[1:], sb.size]
+        emitted = False
+        for s, e in zip(starts, ends):
+            sblk = int(sb[s])
+            for ts in range(s, e, tile_cap):
+                te = min(ts + tile_cap, e)
+                k = te - ts
+                sl = np.zeros(tile_cap, dtype=np.int32)
+                dl = np.zeros(tile_cap, dtype=np.int32)
+                vl = np.zeros(tile_cap, dtype=np.float32)
+                sl[:k] = src_s[ts:te] - sblk * block
+                dl[:k] = dst_s[ts:te] - int(dblk) * block
+                vl[:k] = 1.0
+                new_src.append(sl)
+                new_dst.append(dl)
+                new_val.append(vl)
+                if weighted:
+                    wl = np.zeros(tile_cap, dtype=np.float32)
+                    wl[:k] = w_s[ts:te]
+                    new_wt.append(wl)
+                new_sb.append(sblk)
+                new_db.append(int(dblk))
+                emitted = True
+        if not emitted:  # block went empty: keep the coverage-tile invariant
+            new_src.append(np.zeros(tile_cap, np.int32))
+            new_dst.append(np.zeros(tile_cap, np.int32))
+            new_val.append(np.zeros(tile_cap, np.float32))
+            if weighted:
+                new_wt.append(np.zeros(tile_cap, np.float32))
+            new_sb.append(0)
+            new_db.append(int(dblk))
+
+    def merged(kept: np.ndarray, fresh: list, dtype) -> np.ndarray:
+        fresh_a = (np.stack(fresh) if fresh
+                   else np.zeros((0,) + kept.shape[1:], dtype))
+        return np.concatenate([np.asarray(kept)[keep], fresh_a])
+
+    t_db = merged(coo.tile_dst_block, [np.int32(x) for x in new_db], np.int32)
+    # a dst block's tiles are wholly kept or wholly fresh, so a stable sort
+    # by dst block restores exactly the full build's tile order
+    order2 = np.argsort(t_db, kind="stable")
+    return BlockedCOO(
+        n=coo.n,
+        block=block,
+        n_blocks=n_blocks,
+        tiles_src_local=merged(coo.tiles_src_local, new_src, np.int32)[order2],
+        tiles_dst_local=merged(coo.tiles_dst_local, new_dst, np.int32)[order2],
+        tiles_valid=merged(coo.tiles_valid, new_val, np.float32)[order2],
+        tile_src_block=merged(
+            coo.tile_src_block, [np.int32(x) for x in new_sb], np.int32
+        )[order2],
+        tile_dst_block=t_db[order2],
+        tiles_weight=(merged(coo.tiles_weight, new_wt, np.float32)[order2]
+                      if weighted else None),
     )

@@ -101,6 +101,15 @@ def serve_main(argv) -> int:
     ap.add_argument("--backend", choices=("jax", "pallas"), default="jax")
     ap.add_argument("--handle-dangling", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--updates", type=int, default=0, metavar="N",
+                    help="apply N random edge updates (adds+dels) between the "
+                         "two halves of the query stream — the dynamic-graph "
+                         "serving path (docs/DYNAMIC.md)")
+    ap.add_argument("--update-batches", type=int, default=1,
+                    help="split --updates over this many batches")
+    ap.add_argument("--localized", action="store_true",
+                    help="sink-bounded updates (dangling→dangling adds) "
+                         "instead of uniform random ones")
     args = ap.parse_args(argv)
     if args.queries < 1:
         ap.error("--queries must be >= 1")
@@ -116,7 +125,26 @@ def serve_main(argv) -> int:
     queries = make_query_stream(g.n, args.queries, top_k=args.top_k,
                                 seed=args.seed)
     t0 = time.time()
-    responses = eng.drain(queries)
+    if args.updates > 0:
+        from repro.core.dynamic import random_update_batch
+
+        half = len(queries) // 2
+        responses = eng.drain(queries[:half])
+        rng = np.random.default_rng(args.seed)
+        per = max(1, args.updates // max(args.update_batches, 1))
+        applied = 0
+        for _ in range(max(args.update_batches, 1)):
+            adds, dels = random_update_batch(eng.g, rng, per,
+                                             localized=args.localized)
+            delta = eng.apply_updates(adds=adds, dels=dels)
+            applied += delta.num_ops
+        print(f"applied {applied} edge updates "
+              f"({'localized' if args.localized else 'random'}, "
+              f"{max(args.update_batches, 1)} batch(es)): "
+              f"n={eng.g.n} m={eng.g.m}, warm cache now {len(eng._cache)} rows")
+        responses += eng.drain(queries[half:])
+    else:
+        responses = eng.drain(queries)
     wall = time.time() - t0
     lat = np.asarray([r.latency_s for r in responses]) * 1e3
     print(f"served {len(responses)} queries in {wall:.2f}s "

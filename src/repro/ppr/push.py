@@ -31,7 +31,7 @@ import numpy as np
 from repro.core.solver import DEFAULT_DAMPING, PageRankResult, register_variant
 from repro.graphs.csr import Graph, _concat_ranges
 
-__all__ = ["PushResult", "ppr_push", "topk"]
+__all__ = ["PushResult", "ppr_push", "push_residual", "topk"]
 
 
 def topk(est: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
@@ -62,6 +62,72 @@ class PushResult:
 
     def topk(self, k: int) -> tuple[np.ndarray, np.ndarray]:
         return topk(self.est, k)
+
+
+def push_residual(
+    g: Graph,
+    est: np.ndarray,
+    r: np.ndarray,
+    *,
+    d: float = DEFAULT_DAMPING,
+    rmax: float = 1e-8,
+    bank: float | None = None,
+    signed: bool = False,
+    teleport: np.ndarray | None = None,
+    handle_dangling: bool = False,
+    max_rounds: int = 10_000,
+    touched: np.ndarray | None = None,
+) -> tuple[int, int]:
+    """Drain residual mass from ``r`` into ``est`` **in place**; returns
+    ``(rounds, pushes)``.
+
+    This is the one frontier loop shared by the PPR query path and the
+    dynamic delta-push repair; the two differ only in parameters:
+
+    * PPR (:func:`ppr_push`): ``bank=1-d``, unsigned residuals — a push on
+      ``v`` banks ``(1-d)·r_v`` and the invariant tracked is
+      ``ppr* = est + Σ r_v·ppr(e_v)``.
+    * delta repair (:mod:`repro.core.dynamic`): ``bank=1.0``, ``signed=True``
+      — residuals are *signed* rank defects, a push banks the full ``r_v``
+      (the Neumann identity ``pr* = est + (I − dMᵀ)⁻¹r`` has the identity
+      term banked whole), and the frontier is ``|r| > rmax``.
+
+    ``touched``, when given, is an ``(n,)`` bool mask OR-accumulated with
+    every vertex pushed or scattered into — the repair-locality metric.
+    """
+    bank = (1.0 - d) if bank is None else bank
+    out_ptr, out_dst, out_slot = g.out_csr()
+    w_out = None if g.weights is None else g.weights[out_slot]
+    outdeg = g.out_degree.astype(np.int64)
+    dangling = outdeg == 0
+    pushes = 0
+    rounds = 0
+    frontier = np.flatnonzero((np.abs(r) if signed else r) > rmax)
+    while frontier.size and rounds < max_rounds:
+        rounds += 1
+        pushes += int(frontier.size)
+        if touched is not None:
+            touched[frontier] = True
+        moved = r[frontier].copy()
+        r[frontier] = 0.0  # zero BEFORE scatter so self-loops accumulate
+        est[frontier] += bank * moved
+        live = ~dangling[frontier]
+        if live.any():
+            fl = frontier[live]
+            deg = outdeg[fl]
+            eidx = _concat_ranges(out_ptr, fl)
+            vals = np.repeat(d * moved[live] / deg, deg)
+            if w_out is not None:
+                vals = vals * w_out[eidx]
+            np.add.at(r, out_dst[eidx], vals)
+            if touched is not None:
+                touched[out_dst[eidx]] = True
+        if handle_dangling:
+            dang_mass = d * float(moved[~live].sum())
+            if dang_mass != 0.0:
+                r += dang_mass * teleport  # re-teleport onto the seed dist
+        frontier = np.flatnonzero((np.abs(r) if signed else r) > rmax)
+    return rounds, pushes
 
 
 def ppr_push(
@@ -99,34 +165,9 @@ def ppr_push(
     r = t.copy()
     if g.n == 0:
         return PushResult(est=est, resid=r, rounds=0, pushes=0)
-    out_ptr, out_dst, out_slot = g.out_csr()
-    # per-edge weights in src-sorted (out-CSR) order, via the dst-order slots
-    w_out = None if g.weights is None else g.weights[out_slot]
-    outdeg = g.out_degree.astype(np.int64)
-    dangling = outdeg == 0
-    pushes = 0
-    rounds = 0
-    frontier = np.flatnonzero(r > rmax)
-    while frontier.size and rounds < max_rounds:
-        rounds += 1
-        pushes += int(frontier.size)
-        moved = r[frontier].copy()
-        r[frontier] = 0.0  # zero BEFORE scatter so self-loops accumulate
-        est[frontier] += (1.0 - d) * moved
-        live = ~dangling[frontier]
-        if live.any():
-            fl = frontier[live]
-            deg = outdeg[fl]
-            eidx = _concat_ranges(out_ptr, fl)
-            vals = np.repeat(d * moved[live] / deg, deg)
-            if w_out is not None:
-                vals = vals * w_out[eidx]
-            np.add.at(r, out_dst[eidx], vals)
-        if handle_dangling:
-            dang_mass = d * float(moved[~live].sum())
-            if dang_mass > 0.0:
-                r += dang_mass * t  # re-teleport onto the seed distribution
-        frontier = np.flatnonzero(r > rmax)
+    rounds, pushes = push_residual(
+        g, est, r, d=d, rmax=rmax, bank=1.0 - d, signed=False, teleport=t,
+        handle_dangling=handle_dangling, max_rounds=max_rounds)
     return PushResult(est=est, resid=r, rounds=rounds, pushes=pushes)
 
 

@@ -237,9 +237,12 @@ class PPREngine:
             raise ValueError("cannot serve PPR over an empty graph")
         self.g = g
         self.slots = slots
+        self.d = d
         self.threshold = threshold
+        self.handle_dangling = handle_dangling
         self.iters_per_step = iters_per_step
         self.backend_name = backend
+        self.backend_opts = dict(backend_opts)
         self._backend = _BACKENDS[backend](
             g, slots=slots, d=d, handle_dangling=handle_dangling,
             iters_per_step=iters_per_step, **backend_opts)
@@ -318,6 +321,41 @@ class PPREngine:
     @property
     def active_count(self) -> int:
         return sum(a is not None for a in self._active)
+
+    # -- dynamic updates ----------------------------------------------------
+
+    def apply_updates(self, adds=None, dels=None, add_weights=None):
+        """Apply an edge batch between queries: swap in the updated graph,
+        rebuild the compute backend, and selectively invalidate the warm
+        cache.  Returns the :class:`repro.graphs.csr.GraphDelta`.
+
+        The engine must be idle (no active slots) — in-flight rank rows
+        belong to the old graph's fixed points.  Cache rows are only warm
+        *starts* (every admitted query still iterates to convergence), so
+        invalidation is a latency heuristic, not a correctness one: rows
+        whose seed set intersects an updated dst block (the blocked-COO
+        granularity the backends are tiled on) are dropped, as is the
+        empty-seed global row — a structural change anywhere perturbs the
+        global fixed point."""
+        if self.active_count:
+            raise RuntimeError(
+                "cannot apply updates with active slots; drain first")
+        g_new, delta = self.g.apply_updates(adds=adds, dels=dels,
+                                            add_weights=add_weights)
+        if delta.num_ops:
+            self.g = g_new
+            self._backend = _BACKENDS[self.backend_name](
+                g_new, slots=self.slots, d=self.d,
+                handle_dangling=self.handle_dangling,
+                iters_per_step=self.iters_per_step, **self.backend_opts)
+            block = getattr(getattr(self._backend, "pg", None), "block",
+                            self.backend_opts.get("block", 256))
+            hot = set((delta.touched_vertices() // block).tolist())
+            stale = [k for k in self._cache
+                     if not k or any(s // block in hot for s in k)]
+            for k in stale:
+                del self._cache[k]
+        return delta
 
     def reset(self) -> None:
         """Forget the warm cache and counters (engine must be idle) — lets a
