@@ -50,8 +50,11 @@ for r in sorted(responses, key=lambda r: r.qid):
 print(f"PPR serving smoke: {len(responses)} mixed queries match the oracle")
 EOF
 
-echo "== perf: BENCH_ppr.json (queries/sec + latency percentiles) =="
-python -m benchmarks.bench_ppr --scale 8 --queries 24 --slots 4 \
+echo "== perf: BENCH_ppr.json (oneshot drain + closed-loop load gen, both backends) =="
+# fixed-seed low-qps smoke: oneshot records plus closed-loop records (target
+# qps arrivals, Zipf seed skew, admission queue) and per-backend saturation
+python -m benchmarks.bench_ppr --scale 8 --queries 16 --slots 4 \
+    --backends jax,pallas --load --qps 8,64 --seed 0 \
     --json BENCH_ppr.json
 
 echo "== smoke: out-of-core build pipeline (stream, kill-after-stage-1, resume) =="

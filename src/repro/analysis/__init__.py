@@ -6,7 +6,8 @@ Three passes, one CLI (``python -m repro.analysis [--json X] [--strict]``):
 - ``vmem`` — symbolic VMEM/BlockSpec budgets for the Pallas SpMV kernel
   family (per-operand residency, B/vertex, max vertices/core, index-map
   range safety).
-- ``jaxpr`` — trace every registry variant to a closed jaxpr and lint it
+- ``jaxpr`` — trace every registry variant (plus the serving engine's
+  batched ``multi_step`` on both backends) to a closed jaxpr and lint it
   for float64 leaks, host callbacks, cross-device transfers, and
   collectives inside ``nosync`` schedules.
 - ``contracts`` — registry-metadata vocabulary plus AST verification that
@@ -34,8 +35,9 @@ def run_all() -> list[Finding]:
     pulls in jax tracing machinery the callers of findings-only helpers
     never need)."""
     from repro.analysis.contracts import contract_findings
-    from repro.analysis.jaxpr_lint import jaxpr_findings
+    from repro.analysis.jaxpr_lint import jaxpr_findings, serving_findings
     from repro.analysis.vmem import vmem_findings
 
-    findings = [*vmem_findings(), *jaxpr_findings(), *contract_findings()]
+    findings = [*vmem_findings(), *jaxpr_findings(), *serving_findings(),
+                *contract_findings()]
     return apply_suppressions(findings)

@@ -31,9 +31,10 @@ def _collect(passes: set[str]):
         findings.extend(vmem_findings())
         kernel_reports = {k: r.to_dict() for k, r in analyze_kernels().items()}
     if "jaxpr" in passes:
-        from repro.analysis.jaxpr_lint import jaxpr_findings
+        from repro.analysis.jaxpr_lint import jaxpr_findings, serving_findings
 
         findings.extend(jaxpr_findings())
+        findings.extend(serving_findings())
     if "contracts" in passes:
         from repro.analysis.contracts import contract_findings
 

@@ -183,3 +183,37 @@ def jaxpr_findings(names: Iterable[str] | None = None) -> list[Finding]:
             continue
         out.extend(lint_jaxpr(jaxpr, target=name, schedule=v.schedule))
     return out
+
+
+# The serving engine's batched step is live on the hot path of every query
+# the runtime answers, and it is not a registry variant — lint it under the
+# same contract the solvers carry: slot rounds are independent (nosync), f32
+# end-to-end, no host round-trips inside the jitted step.
+SERVING_BACKENDS = (
+    ("jax", {}),
+    ("pallas", dict(block=8, tile_cap=16, interpret=True)),
+)
+
+
+def serving_findings() -> list[Finding]:
+    """Trace each serving backend's ``multi_step`` and lint it."""
+    from repro.serving.ppr_engine import PPREngine
+
+    out: list[Finding] = []
+    for name, opts in SERVING_BACKENDS:
+        target = f"serving_{name}"
+        try:
+            eng = PPREngine(_tiny_graph(), slots=2, iters_per_step=2,
+                            backend=name, **opts)
+            be = eng._backend
+            jaxpr = jax.make_jaxpr(be.multi_step)(
+                be.state, be.tele, np.zeros(eng.slots, dtype=bool))
+        except Exception as e:
+            out.append(Finding(
+                "jaxpr", target, "untraceable",
+                f"serving backend could not be traced to a jaxpr: "
+                f"{type(e).__name__}: {e}",
+            ))
+            continue
+        out.extend(lint_jaxpr(jaxpr, target=target, schedule="nosync"))
+    return out

@@ -58,6 +58,7 @@ __all__ = [
     "IncrementalPageRank",
     "UpdateReport",
     "exact_residual",
+    "make_update_injector",
     "random_update_batch",
 ]
 
@@ -369,3 +370,26 @@ def random_update_batch(
         need = n_adds - len(adds_list)
     adds = np.stack(adds_list) if adds_list else None
     return adds, dels
+
+
+def make_update_injector(
+    rng: np.random.Generator,
+    ops_per_batch: int,
+    *,
+    frac_adds: float = 0.5,
+    localized: bool = False,
+):
+    """Update hook for the serving load generator (``serving/loadgen.py``).
+
+    Batches must be sampled against the *current* graph — each applied
+    batch changes what a valid next batch looks like — so the injector is a
+    closure the load generator calls with the runtime's live graph at every
+    injection point, not a precomputed list: ``injector(g) -> (adds,
+    dels)``.  Owns its RNG, so a fixed seed reproduces the whole mid-stream
+    update sequence regardless of load timing."""
+
+    def next_batch(g: Graph):
+        return random_update_batch(g, rng, ops_per_batch,
+                                   frac_adds=frac_adds, localized=localized)
+
+    return next_batch

@@ -24,6 +24,19 @@ def make_host_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
     return make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_serving_mesh(shards: int | None = None, axis: str = "batch") -> Mesh:
+    """1-D mesh for the PPR serving runtime: the engine's ``(B, n)`` batch
+    axis is sharded over it (embarrassingly parallel slot rows — see
+    ``repro.serving.ppr_engine.shard_batch_step``).  ``min(shards, devices)``
+    shards, all devices when ``shards`` is None; the engine requires
+    ``slots`` divisible by the resulting axis size."""
+    import jax
+
+    n_dev = jax.device_count()
+    shards = n_dev if shards is None else max(1, min(int(shards), n_dev))
+    return make_mesh((shards,), (axis,))
+
+
 def make_solver_mesh(p: int | None = None, axis: str = "data") -> Mesh:
     """1-D mesh for the distributed PageRank solvers (graph partitions
     sharded along ``axis``): ``min(p, devices)`` shards, all devices when

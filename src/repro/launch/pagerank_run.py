@@ -101,10 +101,27 @@ def serve_main(argv) -> int:
     ap.add_argument("--backend", choices=("jax", "pallas"), default="jax")
     ap.add_argument("--handle-dangling", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="offered load: drive the serving runtime with a "
+                         "target-qps Zipf-skewed closed loop instead of the "
+                         "all-at-once drain (docs/SERVING.md)")
+    ap.add_argument("--queue-depth", type=int, default=32,
+                    help="admission-queue bound; a full queue rejects "
+                         "(backpressure)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-query queue-wait deadline; expired queries are "
+                         "dropped, never solved (0 = none)")
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="shard the (B, n) slot batch over this many devices "
+                         "(1-D serving mesh; 0 = unsharded). slots must "
+                         "divide evenly")
+    ap.add_argument("--zipf-alpha", type=float, default=1.1,
+                    help="seed-popularity skew of the --qps workload")
     ap.add_argument("--updates", type=int, default=0, metavar="N",
-                    help="apply N random edge updates (adds+dels) between the "
-                         "two halves of the query stream — the dynamic-graph "
-                         "serving path (docs/DYNAMIC.md)")
+                    help="apply N random edge updates (adds+dels) mid-stream "
+                         "— the dynamic-graph serving path (docs/DYNAMIC.md); "
+                         "the runtime quiesces, swaps the backend, and "
+                         "invalidates stale cached answers by dst block")
     ap.add_argument("--update-batches", type=int, default=1,
                     help="split --updates over this many batches")
     ap.add_argument("--localized", action="store_true",
@@ -115,46 +132,98 @@ def serve_main(argv) -> int:
         ap.error("--queries must be >= 1")
 
     from repro.serving.ppr_engine import PPREngine, make_query_stream
+    from repro.serving.runtime import ServingRuntime
 
     g = make_dataset(args.dataset, scale_down=args.scale_down)
-    print(f"{args.dataset}: n={g.n} m={g.m}  slots={args.slots} "
-          f"backend={args.backend}")
-    eng = PPREngine(g, slots=args.slots, threshold=args.threshold,
-                    backend=args.backend,
-                    handle_dangling=args.handle_dangling)
-    queries = make_query_stream(g.n, args.queries, top_k=args.top_k,
-                                seed=args.seed)
-    t0 = time.time()
-    if args.updates > 0:
-        from repro.core.dynamic import random_update_batch
+    mesh = None
+    if args.mesh_shards > 0:
+        from repro.launch.mesh import make_serving_mesh
 
-        half = len(queries) // 2
-        responses = eng.drain(queries[:half])
-        rng = np.random.default_rng(args.seed)
-        per = max(1, args.updates // max(args.update_batches, 1))
-        applied = 0
-        for _ in range(max(args.update_batches, 1)):
-            adds, dels = random_update_batch(eng.g, rng, per,
-                                             localized=args.localized)
-            delta = eng.apply_updates(adds=adds, dels=dels)
-            applied += delta.num_ops
-        print(f"applied {applied} edge updates "
-              f"({'localized' if args.localized else 'random'}, "
-              f"{max(args.update_batches, 1)} batch(es)): "
-              f"n={eng.g.n} m={eng.g.m}, warm cache now {len(eng._cache)} rows")
-        responses += eng.drain(queries[half:])
+        mesh = make_serving_mesh(args.mesh_shards)
+    shards = mesh.devices.size if mesh is not None else 1
+    print(f"{args.dataset}: n={g.n} m={g.m}  slots={args.slots} "
+          f"backend={args.backend} mesh_shards={shards}")
+    eng = PPREngine(g, slots=args.slots, threshold=args.threshold,
+                    backend=args.backend, mesh=mesh,
+                    handle_dangling=args.handle_dangling)
+    runtime = ServingRuntime(
+        eng, queue_depth=args.queue_depth,
+        deadline_s=args.deadline_ms * 1e-3 if args.deadline_ms > 0 else None)
+
+    n_batches = max(args.update_batches, 1)
+    per_batch = max(1, args.updates // n_batches) if args.updates else 0
+    if args.qps > 0:
+        from repro.serving.loadgen import (
+            LoadConfig, make_workload, run_closed_loop,
+        )
+
+        cfg = LoadConfig(queries=args.queries, qps=args.qps,
+                         top_k=args.top_k, zipf_alpha=args.zipf_alpha,
+                         seed=args.seed)
+        queries, arrivals = make_workload(g.n, cfg)
+        kwargs = {}
+        if args.updates > 0:
+            from repro.core.dynamic import make_update_injector
+
+            step = max(1, args.queries // (n_batches + 1))
+            kwargs = dict(
+                update_injector=make_update_injector(
+                    np.random.default_rng(args.seed), per_batch,
+                    localized=args.localized),
+                update_at=tuple(step * (i + 1) for i in range(n_batches)))
+        rep = run_closed_loop(runtime, queries, arrivals, **kwargs)
+        p50 = f"{rep.p50_ms:.1f}ms" if rep.p50_ms is not None else "n/a"
+        p99 = f"{rep.p99_ms:.1f}ms" if rep.p99_ms is not None else "n/a"
+        print(f"offered {rep.offered_qps:.1f} q/s → achieved "
+              f"{rep.achieved_qps:.1f} q/s  p50={p50} p99={p99} (under load)")
+        print(f"queue depth mean={rep.queue_depth_mean:.1f} "
+              f"max={rep.queue_depth_max:.0f}  "
+              f"rejected={rep.rejected} ({rep.rejection_rate:.1%})  "
+              f"expired={rep.expired}  cache_hits={rep.cache_hits}  "
+              f"invalidations={rep.cache_invalidations}")
     else:
-        responses = eng.drain(queries)
-    wall = time.time() - t0
-    lat = np.asarray([r.latency_s for r in responses]) * 1e3
-    print(f"served {len(responses)} queries in {wall:.2f}s "
-          f"({len(responses) / wall:.1f} q/s)  "
-          f"p50={np.percentile(lat, 50):.1f}ms "
-          f"p99={np.percentile(lat, 99):.1f}ms  warm_hits={eng.warm_hits}")
-    first = min(responses, key=lambda r: r.qid)
-    top = ", ".join(f"{int(v)}:{float(x):.2e}"
-                    for v, x in zip(first.indices[:5], first.values[:5]))
-    print(f"sample qid={first.qid} seeds={list(first.seeds)} top5: {top}")
+        queries = make_query_stream(g.n, args.queries, top_k=args.top_k,
+                                    seed=args.seed)
+        t0 = time.time()
+        if args.updates > 0:
+            from repro.core.dynamic import random_update_batch
+
+            half = len(queries) // 2
+            responses = runtime.serve(queries[:half])
+            rng = np.random.default_rng(args.seed)
+            applied = 0
+            for _ in range(n_batches):
+                adds, dels = random_update_batch(eng.g, rng, per_batch,
+                                                 localized=args.localized)
+                delta, drained = runtime.apply_updates(adds=adds, dels=dels)
+                responses += drained
+                applied += delta.num_ops
+            print(f"applied {applied} edge updates "
+                  f"({'localized' if args.localized else 'random'}, "
+                  f"{n_batches} batch(es)): n={eng.g.n} m={eng.g.m}, "
+                  f"warm cache now {len(eng._cache)} rows, result cache "
+                  f"{runtime.result_cache_len} "
+                  f"(invalidated "
+                  f"{runtime.metrics.count('cache_invalidations')})")
+            responses += runtime.serve(queries[half:])
+        else:
+            responses = runtime.serve(queries)
+        wall = time.time() - t0
+        lat = np.asarray([r.latency_s for r in responses]) * 1e3
+        print(f"served {len(responses)} queries in {wall:.2f}s "
+              f"({len(responses) / wall:.1f} q/s)  "
+              f"p50={np.percentile(lat, 50):.1f}ms "
+              f"p99={np.percentile(lat, 99):.1f}ms  warm_hits={eng.warm_hits}"
+              f"  cache_hits={runtime.metrics.count('cache_hits')}")
+        first = min(responses, key=lambda r: r.qid)
+        top = ", ".join(f"{int(v)}:{float(x):.2e}"
+                        for v, x in zip(first.indices[:5], first.values[:5]))
+        print(f"sample qid={first.qid} seeds={list(first.seeds)} top5: {top}")
+    # backpressure/occupancy observability: queries bounced off a full batch
+    # used to vanish silently — the summary now always surfaces them
+    print(f"slots: occupancy={eng.slot_occupancy:.0%} "
+          f"submit_rejections={eng.submit_rejections} "
+          f"(re-queued, not dropped)  {runtime.metrics.summary()}")
     return 0
 
 

@@ -34,6 +34,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.pagerank import DeviceGraph
 from repro.core.solver import DEFAULT_DAMPING
@@ -47,9 +48,10 @@ from repro.ppr.batched import (
     teleport_from_seeds,
 )
 from repro.ppr.push import topk
-from repro.utils.jaxcompat import on_tpu
+from repro.utils.jaxcompat import on_tpu, shard_map
 
-__all__ = ["PPRQuery", "PPRResponse", "PPREngine", "make_query_stream"]
+__all__ = ["PPRQuery", "PPRResponse", "PPREngine", "make_query_stream",
+           "shard_batch_step"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +86,7 @@ class PPRResponse:
     iterations: int  # sweeps charged to this slot (iters_per_step granular)
     latency_s: float  # submit → harvest wall time
     warm_start: bool  # row was seeded from the cache
+    cached: bool = False  # answered from the runtime's top-k result cache
 
 
 def make_query_stream(n: int, count: int, *, top_k: int = 10,
@@ -125,6 +128,8 @@ class _Active:
 class _JaxBackend:
     """(B, n) rank batch advanced by the batched vertex-centric sweep."""
 
+    BATCH_AXIS = 0  # slot axis of `state`/`tele` — the mesh-sharded axis
+
     def __init__(self, g: Graph, *, slots: int, d: float,
                  handle_dangling: bool, iters_per_step: int, **_):
         dg = DeviceGraph.from_graph(g)
@@ -144,6 +149,8 @@ class _JaxBackend:
                 0, iters_per_step, body,
                 (pr, jnp.full((pr.shape[0],), jnp.inf, jnp.float32)))
 
+        # unjitted: the mesh wrapper and the jaxpr lint both need the raw fn
+        self.multi_step = multi_step
         self._multi_step = jax.jit(multi_step)
 
     def set_row(self, slot: int, row: np.ndarray, trow: np.ndarray) -> None:
@@ -161,6 +168,8 @@ class _JaxBackend:
 
 class _PallasBackend:
     """(n_blocks, B, block) rank batch advanced by the multi-vector GS pass."""
+
+    BATCH_AXIS = 1  # slot axis of the (n_blocks, B, block) state
 
     def __init__(self, g: Graph, *, slots: int, d: float,
                  handle_dangling: bool, iters_per_step: int,
@@ -189,6 +198,8 @@ class _PallasBackend:
                 0, iters_per_step, body,
                 (pr, jnp.full((pr.shape[1],), jnp.inf, jnp.float32)))
 
+        # unjitted: the mesh wrapper and the jaxpr lint both need the raw fn
+        self.multi_step = multi_step
         self._multi_step = jax.jit(multi_step)
 
     def set_row(self, slot: int, row: np.ndarray, trow: np.ndarray) -> None:
@@ -212,6 +223,32 @@ class _PallasBackend:
 _BACKENDS = {"jax": _JaxBackend, "pallas": _PallasBackend}
 
 
+def shard_batch_step(backend, mesh: Mesh, axis: Optional[str] = None):
+    """Re-jit ``backend``'s multi-step with the slot axis sharded over a 1-D
+    ``mesh`` (``launch/mesh.py::make_serving_mesh``).
+
+    Batch rows are independent solves — embarrassingly parallel — so the
+    shard_map body is the backend's own ``multi_step`` unchanged: each device
+    runs the identical sweep on its slice of slots and no collective ever
+    runs inside the solve loop (the graph operands close over as replicated
+    constants, the same discipline as ``repro.core.distributed``).  On a
+    1-device mesh the mapped program IS the unsharded program, so the
+    single-device path stays bit-identical — the serving tests assert exact
+    top-k equality between the two."""
+    axis = mesh.axis_names[0] if axis is None else axis
+    bax = backend.BATCH_AXIS
+    nd = backend.state.ndim
+    spec = P(*[axis if i == bax else None for i in range(nd)])
+    mapped = shard_map(
+        backend.multi_step, mesh=mesh,
+        in_specs=(spec, spec, P(axis)),
+        out_specs=(spec, P(axis)),
+        check_vma=False,
+    )
+    backend._multi_step = jax.jit(mapped)
+    return backend
+
+
 class PPREngine:
     """Continuous-batching PPR serving over ``slots`` fixed batch rows.
 
@@ -229,12 +266,22 @@ class PPREngine:
     def __init__(self, g: Graph, *, slots: int = 8, d: float = DEFAULT_DAMPING,
                  threshold: float = 1e-7, handle_dangling: bool = False,
                  backend: str = "jax", iters_per_step: int = 8,
-                 cache_size: int = 256, **backend_opts):
+                 cache_size: int = 256, mesh: Optional[Mesh] = None,
+                 **backend_opts):
         if backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {sorted(_BACKENDS)}, "
                              f"got {backend!r}")
         if g.n == 0:
             raise ValueError("cannot serve PPR over an empty graph")
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError(f"serving mesh must be 1-D, got axes "
+                                 f"{mesh.axis_names}")
+            shards = mesh.shape[mesh.axis_names[0]]
+            if slots % shards:
+                raise ValueError(
+                    f"slots ({slots}) must be divisible by the mesh axis "
+                    f"size ({shards}) — each device owns slots/shards rows")
         self.g = g
         self.slots = slots
         self.d = d
@@ -243,15 +290,49 @@ class PPREngine:
         self.iters_per_step = iters_per_step
         self.backend_name = backend
         self.backend_opts = dict(backend_opts)
-        self._backend = _BACKENDS[backend](
-            g, slots=slots, d=d, handle_dangling=handle_dangling,
-            iters_per_step=iters_per_step, **backend_opts)
+        self.mesh = mesh
+        self._backend = self._make_backend(g)
         self._active: list[Optional[_Active]] = [None] * slots
         # free slots stay frozen: their rows are held in place by the sweep
         self._frozen = np.ones(slots, dtype=bool)
         self._cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
         self._cache_size = cache_size
         self.warm_hits = 0
+        # occupancy/backpressure observability (satellite of the serving
+        # runtime): how often submit bounced off a full batch, and how many
+        # slot·steps were actually busy vs available
+        self.submit_rejections = 0
+        self.busy_slot_steps = 0
+        self.total_slot_steps = 0
+        # fired with the GraphDelta after every applied update batch — the
+        # serving runtime hangs its result-cache invalidation here
+        self.update_callbacks: list = []
+
+    def _make_backend(self, g: Graph):
+        backend = _BACKENDS[self.backend_name](
+            g, slots=self.slots, d=self.d,
+            handle_dangling=self.handle_dangling,
+            iters_per_step=self.iters_per_step, **self.backend_opts)
+        if self.mesh is not None:
+            backend = shard_batch_step(backend, self.mesh)
+        return backend
+
+    @property
+    def cache_block(self) -> int:
+        """Invalidation granularity: the blocked-COO dst-block width the
+        compute backend is tiled on (pallas), or the configured/default
+        block for the un-tiled jax backend — the same width
+        ``GraphDelta.touched_dst_blocks`` is quoted in."""
+        return getattr(getattr(self._backend, "pg", None), "block",
+                       self.backend_opts.get("block", 256))
+
+    @property
+    def slot_occupancy(self) -> float:
+        """Busy fraction of the batch over every step so far (0 when the
+        engine never stepped)."""
+        if not self.total_slot_steps:
+            return 0.0
+        return self.busy_slot_steps / self.total_slot_steps
 
     # -- scheduling ---------------------------------------------------------
 
@@ -274,6 +355,7 @@ class PPREngine:
         try:
             slot = self._active.index(None)
         except ValueError:
+            self.submit_rejections += 1
             return False
         # the subsystem-wide bias convention (repro.ppr.batched.bias_scaled):
         # a vertex bias scales the teleport row, t_eff = t·bias
@@ -295,6 +377,8 @@ class PPREngine:
         recycle the slots that converged."""
         if all(a is None for a in self._active):
             return []
+        self.busy_slot_steps += self.active_count
+        self.total_slot_steps += self.slots
         err = self._backend.step(self._frozen)
         out: list[PPRResponse] = []
         for slot, act in enumerate(self._active):
@@ -344,17 +428,15 @@ class PPREngine:
                                             add_weights=add_weights)
         if delta.num_ops:
             self.g = g_new
-            self._backend = _BACKENDS[self.backend_name](
-                g_new, slots=self.slots, d=self.d,
-                handle_dangling=self.handle_dangling,
-                iters_per_step=self.iters_per_step, **self.backend_opts)
-            block = getattr(getattr(self._backend, "pg", None), "block",
-                            self.backend_opts.get("block", 256))
+            self._backend = self._make_backend(g_new)
+            block = self.cache_block
             hot = set((delta.touched_vertices() // block).tolist())
             stale = [k for k in self._cache
                      if not k or any(s // block in hot for s in k)]
             for k in stale:
                 del self._cache[k]
+            for cb in self.update_callbacks:
+                cb(delta)
         return delta
 
     def reset(self) -> None:
@@ -366,6 +448,9 @@ class PPREngine:
             raise RuntimeError("cannot reset a PPREngine with active slots")
         self._cache.clear()
         self.warm_hits = 0
+        self.submit_rejections = 0
+        self.busy_slot_steps = 0
+        self.total_slot_steps = 0
 
     def drain(self, queries, max_steps: int = 100_000) -> list[PPRResponse]:
         """Feed ``queries`` through the engine (admitting as slots free up)
