@@ -98,14 +98,23 @@ def bench_load(scale: int = 9, avg_degree: int = 8, queries: int = 64,
     outside every measured window); each rate starts from a reset runtime
     so queues, caches, and metrics are cold.  ``updates > 0`` injects that
     many random edge updates mid-stream at every rate — measuring latency
-    under load *with* result-cache invalidation churn."""
+    under load *with* result-cache invalidation churn.  Updates mutate the
+    engine's graph permanently, so after an updating rate the engine is
+    rebuilt from the pristine graph (and re-warmed outside the measured
+    window): every rate in the sweep measures the SAME graph, and each
+    record carries ``m_final`` to show the within-run edge drift."""
     g = rmat_graph(scale, avg_degree=avg_degree, seed=seed)
-    eng = PPREngine(g, slots=slots, threshold=threshold, backend=backend,
-                    iters_per_step=iters_per_step, **_engine_opts(backend))
-    runtime = ServingRuntime(eng, queue_depth=queue_depth)
-    # warm the trace outside the measured runs
-    runtime.serve(make_query_stream(g.n, min(2, queries), top_k=top_k,
-                                    seed=seed))
+    warm_qs = make_query_stream(g.n, min(2, queries), top_k=top_k, seed=seed)
+
+    def _make_runtime() -> ServingRuntime:
+        eng = PPREngine(g, slots=slots, threshold=threshold, backend=backend,
+                        iters_per_step=iters_per_step,
+                        **_engine_opts(backend))
+        rt = ServingRuntime(eng, queue_depth=queue_depth)
+        rt.serve(warm_qs)  # warm the trace outside the measured runs
+        return rt
+
+    runtime = _make_runtime()
     deadline_s = deadline_ms * 1e-3 if deadline_ms > 0 else None
     base = dict(n=g.n, m=g.m, backend=backend, slots=slots,
                 threshold=threshold, iters_per_step=iters_per_step,
@@ -115,6 +124,11 @@ def bench_load(scale: int = 9, avg_degree: int = 8, queries: int = 64,
     records: list[dict] = []
     saturation = None
     for qps in qps_list:
+        if runtime.engine.g is not g:
+            # the previous rate's mid-stream updates mutated the engine's
+            # graph; a fresh engine restores the pristine one
+            runtime.close()
+            runtime = _make_runtime()
         runtime.reset()
         cfg = LoadConfig(queries=queries, qps=float(qps), top_k=top_k,
                          zipf_alpha=zipf_alpha, seed=seed)
@@ -129,10 +143,12 @@ def bench_load(scale: int = 9, avg_degree: int = 8, queries: int = 64,
                 update_at=(queries // 2,))
         rep = run_closed_loop(runtime, qs, arrivals, deadline_s=deadline_s,
                               **kwargs)
-        records.append({**base, **rep.to_dict()})
+        records.append({**base, **rep.to_dict(),
+                        "m_final": runtime.engine.g.m})
         if (rep.achieved_qps >= 0.9 * rep.offered_qps
                 and rep.rejection_rate <= 0.01):
             saturation = max(saturation or 0.0, rep.offered_qps)
+    runtime.close()
     return records, saturation
 
 

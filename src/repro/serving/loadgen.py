@@ -294,15 +294,20 @@ def sweep_offered_load(
     rejection rate ≤ ``max_rejection_rate``), or None if even the lowest
     rate saturated.  ``make_runtime`` is called once per rate so each run
     starts with cold queues/caches (reuse one engine inside it to keep
-    re-jitting out of the measurement)."""
+    re-jitting out of the measurement — wrapping it in a new runtime
+    replaces the previous runtime's update callback, and each runtime is
+    closed after its run, so nothing accumulates on the shared engine)."""
     reports: list[LoadReport] = []
     saturation = None
     for qps in qps_list:
         runtime = make_runtime()
         queries, arrivals = make_workload(
             n, dataclasses.replace(cfg, qps=float(qps)))
-        rep = run_closed_loop(runtime, queries, arrivals,
-                              deadline_s=deadline_s)
+        try:
+            rep = run_closed_loop(runtime, queries, arrivals,
+                                  deadline_s=deadline_s)
+        finally:
+            runtime.close()
         reports.append(rep)
         sustained = (rep.achieved_qps >= sustain_fraction * rep.offered_qps
                      and rep.rejection_rate <= max_rejection_rate)

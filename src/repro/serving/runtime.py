@@ -16,15 +16,20 @@ into a production-shaped queueing system:
 * **Invalidating top-k result cache** — a bounded LRU of *answers* (not
   warm starts: a hit skips the solve entirely and costs zero slot time),
   keyed by the engine's canonical seed-set key plus ``top_k``.  Updates
-  applied through :meth:`apply_updates` invalidate by destination block:
-  any cache entry whose seed set **or answered vertices** intersect
-  ``GraphDelta.touched_dst_blocks`` (at the engine's ``cache_block``
-  granularity) is dropped, as is the global (empty-seed) entry — a
-  structural change anywhere perturbs the global fixed point.  Entries
-  fully outside the touched blocks survive: PPR mass reaches a vertex only
-  through its in-edges, and an untouched dst block's in-edge set is
-  unchanged.  The regression tier (tests/test_serving.py) asserts a cached
-  answer is never served after an update touches its blocks.
+  applied through :meth:`apply_updates` invalidate on a *sound* reach
+  argument: an edge update perturbs the fixed point of every seed set that
+  can reach it (the source's whole out-column rescales and the change
+  propagates transitively downstream), so an entry survives only when NO
+  touched vertex is weakly connected to its seeds in the union of the old
+  and new graphs — directed reachability is contained in weak
+  connectivity, and an unreachable source holds zero PPR mass in both
+  fixed points, so its column edit is a no-op for that entry.  Everything
+  else is dropped, including always the global (empty-seed) entry, and
+  the entire cache when ``handle_dangling`` is on and dangling vertices
+  exist (redistributed dangling mass couples otherwise-disconnected
+  components).  The regression tier (tests/test_serving.py) asserts a
+  stale answer is never served after an update anywhere upstream or
+  downstream of it on a connected graph.
 
 * **Mesh sharding** — construct the engine with
   ``mesh=launch.mesh.make_serving_mesh(...)`` and the ``(B, n)`` batch axis
@@ -51,6 +56,29 @@ from repro.serving.metrics import ServingMetrics
 from repro.serving.ppr_engine import PPREngine, PPRQuery, PPRResponse
 
 __all__ = ["Admission", "QueueEntry", "ServingRuntime"]
+
+
+def _weak_components(n: int, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """Weak-connectivity labels (label = min vertex id in the component) by
+    min-label hooking + pointer jumping — O(m) numpy work per round,
+    O(log n) rounds even on chains/rings, no per-edge Python loop."""
+    label = np.arange(n, dtype=np.int64)
+    if src.size == 0:
+        return label
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    while True:
+        ls, ld = label[src], label[dst]
+        if (ls == ld).all():
+            return label
+        # hook the larger label onto the smaller (writes strictly decrease,
+        # so chains stay acyclic), then compress to fixpoint
+        np.minimum.at(label, np.maximum(ls, ld), np.minimum(ls, ld))
+        while True:
+            jumped = label[label]
+            if (jumped == label).all():
+                break
+            label = jumped
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +128,13 @@ class ServingRuntime:
         self._results: OrderedDict[tuple, tuple] = OrderedDict()
         self._results_size = result_cache_size
         self.metrics = ServingMetrics()
+        # one runtime per engine: wrapping an engine REPLACES any previous
+        # runtime's invalidation hook (repeated make_runtime() patterns must
+        # not accumulate callbacks that keep dead runtimes alive and
+        # re-invalidate their caches); close() detaches explicitly
+        engine.update_callbacks[:] = [
+            cb for cb in engine.update_callbacks
+            if not isinstance(getattr(cb, "__self__", None), ServingRuntime)]
         engine.update_callbacks.append(self._invalidate)
 
     # -- admission ----------------------------------------------------------
@@ -124,10 +159,12 @@ class ServingRuntime:
             self._results.move_to_end(self._result_key(q))
             self.metrics.incr("cache_hits")
             idx, vals, seeds = cached
+            # warm_start=False: no iteration was seeded from the warm cache
+            # (no iteration ran at all) — `cached` alone marks the hit
             return Admission("cached", PPRResponse(
                 qid=q.qid, seeds=seeds, indices=idx.copy(),
                 values=vals.copy(), iterations=0, latency_s=0.0,
-                warm_start=True, cached=True))
+                warm_start=False, cached=True))
         self.metrics.incr("cache_misses")
         if len(self._queue) >= self.queue_depth:
             self.metrics.incr("rejected")
@@ -153,7 +190,12 @@ class ServingRuntime:
             if entry.expired(now):
                 self.metrics.incr("expired")
                 continue
-            assert eng.submit(entry.query)  # a slot is free by the guard
+            if not eng.submit(entry.query):
+                # unreachable by the active_count guard, but never inside an
+                # assert: under `python -O` that would silently drop the
+                # already-popped entry
+                raise RuntimeError(
+                    "engine refused a submit despite a free slot")
             self.metrics.incr("admitted")
             admitted += 1
         if admitted:
@@ -236,22 +278,42 @@ class ServingRuntime:
         return delta, drained
 
     def _invalidate(self, delta) -> None:
-        """Result-cache invalidation contract (docs/SERVING.md): drop the
-        global entry plus every entry whose seeds or answered vertices land
-        in a touched dst block; disjoint entries survive."""
-        block = self.engine.cache_block
-        hot = set(delta.touched_dst_blocks(block).tolist())
-        if not hot:
+        """Result-cache invalidation contract (docs/SERVING.md): an entry
+        survives an update batch only when NO touched vertex is weakly
+        connected to its seed set in the union of the old and new graphs.
+
+        Why that is sound for a fixed point (not just one step): PPR mass
+        from seeds ``S`` reaches exactly the vertices directed-reachable
+        from ``S``, and reachability — in either graph — is contained in
+        weak connectivity over the union.  If no updated edge endpoint
+        shares a weak component with ``S``, every updated source ``a`` has
+        ``pr(a) = 0`` in both fixed points, so rescaling ``a``'s out-column
+        (and adding/removing in-edges that carry ``pr(a)``'s mass) changes
+        nothing the entry can see.  Any intersection drops the entry: the
+        perturbation propagates transitively downstream, so no
+        block/distance cutoff short of reachability is safe.  The global
+        (empty-seed) entry always drops, and ``handle_dangling`` with any
+        dangling vertex present drops the whole cache — redistributed
+        dangling mass couples otherwise-disconnected components."""
+        if not self._results or not delta.num_ops:
             return
-        stale = []
-        for key, (idx, _vals, seeds) in self._results.items():
-            if not seeds:  # global fixed point: any update perturbs it
-                stale.append(key)
-                continue
-            verts = np.concatenate([np.asarray(seeds, dtype=np.int64),
-                                    np.asarray(idx, dtype=np.int64)])
-            if np.isin(verts // block, list(hot)).any():
-                stale.append(key)
+        g = self.engine.g  # the callback fires after the graph swap
+        if self.engine.handle_dangling and (
+                bool((g.out_degree == 0).any()) or delta.undangled.size > 0):
+            dropped = len(self._results)
+            self._results.clear()
+            self.metrics.incr("cache_invalidations", dropped)
+            return
+        # union graph = post-update edges + the deleted edges (which existed
+        # pre-update), so one labeling covers reachability in both graphs
+        label = _weak_components(
+            g.n,
+            np.r_[g.src.astype(np.int64), delta.deleted[:, 0]],
+            np.r_[g.dst.astype(np.int64), delta.deleted[:, 1]])
+        hot = np.zeros(g.n, dtype=bool)
+        hot[label[delta.touched_vertices()]] = True
+        stale = [key for key, (_idx, _vals, seeds) in self._results.items()
+                 if not seeds or hot[label[list(seeds)]].any()]
         for key in stale:
             del self._results[key]
         self.metrics.incr("cache_invalidations", len(stale))
@@ -265,11 +327,20 @@ class ServingRuntime:
     def reset(self) -> None:
         """Forget queue, caches, and metrics (engine must be idle) — lets a
         benchmark reuse one runtime (and the engine's traced step) across
-        measured runs."""
+        measured runs.  The update callback stays registered: the runtime is
+        still live; use :meth:`close` to detach from the engine."""
         self.engine.reset()
         self._queue.clear()
         self._results.clear()
         self.metrics = ServingMetrics()
+
+    def close(self) -> None:
+        """Detach from the engine: deregister the invalidation callback so a
+        discarded runtime is neither kept alive nor re-invalidated by future
+        engine updates.  Idempotent; the runtime must not be used after."""
+        cbs = self.engine.update_callbacks
+        if self._invalidate in cbs:
+            cbs.remove(self._invalidate)
 
     def stats(self) -> dict:
         """The structured metrics dict the launcher and benchmarks print:

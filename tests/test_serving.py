@@ -84,6 +84,8 @@ def test_result_cache_hit_and_eviction(g64):
         statuses[i] = adm.status
         if adm.status == "cached":
             assert adm.response.cached and adm.response.iterations == 0
+            # no iteration was warm-started — cached alone marks the hit
+            assert not adm.response.warm_start
             ref = next(r for r in first if r.seeds == (i,))
             np.testing.assert_array_equal(adm.response.indices, ref.indices)
             np.testing.assert_array_equal(adm.response.values, ref.values)
@@ -92,8 +94,8 @@ def test_result_cache_hit_and_eviction(g64):
 
 
 def _two_community_graph(n=128, block=64):
-    """Two disconnected rings, one per dst block: an update in community B
-    (block 1) must not invalidate community A's cached answer."""
+    """Two disconnected rings: an update in community B must not invalidate
+    community A's cached answer (disjoint weak components)."""
     half = n // 2
     src = np.concatenate([np.arange(half), np.arange(half, n)])
     dst = np.concatenate([(np.arange(half) + 1) % half,
@@ -101,21 +103,29 @@ def _two_community_graph(n=128, block=64):
     return Graph.from_edges(n, src, dst), half, block
 
 
+def _assert_matches_oracle(rt, fresh, seeds, k=8):
+    """The re-solved answer matches the float64 oracle on the CURRENT
+    (post-update) graph."""
+    ref = ppr_numpy(rt.engine.g, teleport_from_seeds([seeds], rt.engine.g.n),
+                    threshold=1e-12)[0][0]
+    kth = np.sort(ref)[::-1][k - 1]
+    assert (ref[fresh.indices] >= kth - 1e-6).all()
+    assert np.abs(fresh.values - ref[fresh.indices]).max() < 1e-5
+
+
 def test_stale_cached_topk_never_served_after_update():
     g, half, block = _two_community_graph()
-    eng = _engine(g, block=block)  # cache_block = the invalidation width
-    assert eng.cache_block == block
-    rt = ServingRuntime(eng)
+    rt = ServingRuntime(_engine(g, block=block))
     rt.serve([PPRQuery(qid=0, seeds=(5,), top_k=8),
               PPRQuery(qid=1, seeds=(70,), top_k=8)])
     assert rt.result_cache_len == 2
 
-    # shortcut edge inside community B only: touched dst blocks == {1}
+    # shortcut edge inside community B only: A's component is untouched
     delta, _ = rt.apply_updates(adds=np.array([[70, 90]]))
-    assert set(delta.touched_dst_blocks(block).tolist()) == {1}
+    assert delta.num_ops == 1
     assert rt.metrics.count("cache_invalidations") == 1
 
-    # community A untouched: still served from cache
+    # community A disjoint from every touched vertex: still served exactly
     assert rt.offer(PPRQuery(qid=2, seeds=(5,), top_k=8)).status == "cached"
     # community B: the stale answer must NOT come back — it is re-solved
     # against the updated graph and matches the float64 oracle on it
@@ -126,11 +136,80 @@ def test_stale_cached_topk_never_served_after_update():
         out += rt.pump()
     (fresh,) = [r for r in out if r.qid == 3]
     assert not fresh.cached
-    ref = ppr_numpy(rt.engine.g, teleport_from_seeds([(70,)], rt.engine.g.n),
-                    threshold=1e-12)[0][0]
-    kth = np.sort(ref)[::-1][7]
-    assert (ref[fresh.indices] >= kth - 1e-6).all()
-    assert np.abs(fresh.values - ref[fresh.indices]).max() < 1e-5
+    _assert_matches_oracle(rt, fresh, (70,))
+
+
+def test_connected_graph_invalidates_transitively():
+    """THE unsoundness regression: on one connected ring, an update whose
+    endpoints sit far from a cached entry's seeds AND answered vertices (a
+    different dst block entirely) still perturbs the entry's fixed point
+    transitively — it must be dropped, not served as an exact answer."""
+    n, block = 128, 64
+    g = Graph.from_edges(n, np.arange(n), (np.arange(n) + 1) % n)
+    rt = ServingRuntime(_engine(g, block=block))
+    rt.serve([PPRQuery(qid=0, seeds=(5,), top_k=8)])
+    assert rt.result_cache_len == 1
+
+    # both endpoints in block 1; the entry's seeds/top-k all live in block
+    # 0 (vertices 5..12) — a dst-block intersection test would keep it
+    delta, _ = rt.apply_updates(adds=np.array([[70, 90]]))
+    assert not set(np.r_[delta.touched_src, delta.touched_dst] // block) & {0}
+    assert rt.metrics.count("cache_invalidations") == 1
+    adm = rt.offer(PPRQuery(qid=1, seeds=(5,), top_k=8))
+    assert adm.status == "queued"
+    out = []
+    while rt.pending:
+        out += rt.pump()
+    (fresh,) = [r for r in out if r.qid == 1]
+    assert not fresh.cached
+    _assert_matches_oracle(rt, fresh, (5,))
+
+
+def test_deletion_invalidates_through_old_graph_reachability():
+    """Deleting the only edge that BRIDGED two components must invalidate
+    entries upstream of it even though the new graph no longer connects
+    them — reachability is judged on the union of old and new graphs."""
+    n = 64
+    # ring over [0, 32) plus a bridge 5 -> 40 and a chain 40 -> 41
+    half = 32
+    src = np.r_[np.arange(half), [5, 40]]
+    dst = np.r_[(np.arange(half) + 1) % half, [40, 41]]
+    g = Graph.from_edges(n, src, dst)
+    rt = ServingRuntime(_engine(g))
+    rt.serve([PPRQuery(qid=0, seeds=(5,), top_k=8)])
+    rt.apply_updates(dels=np.array([[5, 40]]))
+    assert rt.metrics.count("cache_invalidations") == 1
+    assert rt.offer(PPRQuery(qid=1, seeds=(5,), top_k=8)).status == "queued"
+
+
+def test_handle_dangling_drops_whole_cache():
+    """Redistributed dangling mass couples disconnected components, so with
+    handle_dangling the component survival argument is off: any update
+    drops every entry, even in an untouched component."""
+    g2, half, block = _two_community_graph()
+    # append a dangling (isolated) vertex so redistribution is live
+    g = Graph.from_edges(g2.n + 1, g2.src, g2.dst)
+    rt = ServingRuntime(_engine(g, handle_dangling=True))
+    rt.serve([PPRQuery(qid=0, seeds=(5,), top_k=8),
+              PPRQuery(qid=1, seeds=(70,), top_k=8)])
+    rt.apply_updates(adds=np.array([[70, 90]]))
+    assert rt.metrics.count("cache_invalidations") == 2
+    assert rt.result_cache_len == 0
+    assert rt.offer(PPRQuery(qid=2, seeds=(5,), top_k=8)).status == "queued"
+
+
+def test_runtime_replaces_and_closes_update_callback(g64):
+    """Wrapping one engine in a second runtime must not accumulate
+    invalidation hooks (dead runtimes would be kept alive and re-invalidated
+    on every update), and close() detaches idempotently."""
+    eng = _engine(g64)
+    rt1 = ServingRuntime(eng)
+    assert eng.update_callbacks == [rt1._invalidate]
+    rt2 = ServingRuntime(eng)
+    assert eng.update_callbacks == [rt2._invalidate]
+    rt2.close()
+    assert eng.update_callbacks == []
+    rt2.close()  # idempotent
 
 
 def test_global_entry_invalidated_by_any_update():
