@@ -9,8 +9,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== lint: ruff (or built-in F401/F841 fallback) =="
 python scripts/lint.py
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q "$@"
+echo "== tier-1: pytest (slow tier excluded; run it with: pytest -m slow) =="
+python -m pytest -x -q -m "not slow" "$@"
 
 echo "== static analysis: ANALYSIS.json (strict — unsuppressed findings fail) =="
 python -m repro.analysis --strict --json ANALYSIS.json
@@ -115,9 +115,14 @@ python -m benchmarks.bench_dynamic --scale 14 --ops 1000 --batches 8 \
 echo "== docs smoke: registry <-> README table + docs/*.md code references =="
 python scripts/docs_check.py
 
-echo "== perf trajectory: BENCH_variants.json (quick, 1 dataset) =="
-python -m benchmarks.bench_variants --datasets webStanford --scale-down 2048 \
-    --json BENCH_variants.json
+echo "== perf trajectory: BENCH_variants.json (quick; envelope-gated) =="
+# webStanford + the heavy-skew R-MAT fixture, BFS-reordered (the adaptive
+# tier's fixture config): records include per-variant sweeps, and
+# --assert-trajectories fails any >10% iteration/sweep regression against
+# tests/data/trajectory_envelopes.json (re-pin with --pin-trajectories)
+python -m benchmarks.bench_variants --datasets webStanford,rmatSkew \
+    --scale-down 2048 --reorder bfs \
+    --json BENCH_variants.json --assert-trajectories
 echo "wrote BENCH_variants.json"
 
 echo "check.sh: all green"

@@ -85,22 +85,29 @@ def main() -> int:
     print(f"resolved {n_refs} code references across "
           f"{len(DOC_FILES)} docs files")
 
+    from repro.analysis.contracts import (
+        SCHED_DOCS_BEGIN, SCHED_DOCS_END, scheduling_markdown,
+    )
     from repro.analysis.vmem import DOCS_BEGIN, DOCS_END, kernels_markdown
 
-    kernels_md = (ROOT / "docs" / "KERNELS.md").read_text(encoding="utf-8")
-    if DOCS_BEGIN not in kernels_md or DOCS_END not in kernels_md:
-        failures.append("docs/KERNELS.md lost the generated VMEM table "
-                        "markers")
-    else:
-        embedded = (DOCS_BEGIN
-                    + kernels_md.split(DOCS_BEGIN, 1)[1].split(DOCS_END)[0]
-                    + DOCS_END)
-        if embedded.strip() != kernels_markdown().strip():
+    generated = [
+        ("docs/KERNELS.md", DOCS_BEGIN, DOCS_END, kernels_markdown,
+         "VMEM table", "the analyzer"),
+        ("docs/SCHEDULING.md", SCHED_DOCS_BEGIN, SCHED_DOCS_END,
+         scheduling_markdown, "registry schedule table", "the registry"),
+    ]
+    for rel, begin, end, generate, what, source in generated:
+        text = (ROOT / rel).read_text(encoding="utf-8")
+        if begin not in text or end not in text:
+            failures.append(f"{rel} lost the generated {what} markers")
+            continue
+        embedded = begin + text.split(begin, 1)[1].split(end)[0] + end
+        if embedded.strip() != generate().strip():
             failures.append(
-                "docs/KERNELS.md VMEM table is stale vs the analyzer — run "
-                "`python -m repro.analysis --write-docs-table`")
+                f"{rel} {what} is stale vs {source} — run "
+                f"`python -m repro.analysis --write-docs-table`")
         else:
-            print("docs/KERNELS.md VMEM table matches the live analyzer")
+            print(f"{rel} {what} matches {source}")
 
     if failures:
         for f in failures:

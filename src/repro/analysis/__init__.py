@@ -1,7 +1,7 @@
 """Static analysis for the PageRank reproduction: decidable-from-the-program
 checks of the contracts the non-blocking claim rests on.
 
-Three passes, one CLI (``python -m repro.analysis [--json X] [--strict]``):
+Four passes, one CLI (``python -m repro.analysis [--json X] [--strict]``):
 
 - ``vmem`` — symbolic VMEM/BlockSpec budgets for the Pallas SpMV kernel
   family (per-operand residency, B/vertex, max vertices/core, index-map
@@ -12,6 +12,9 @@ Three passes, one CLI (``python -m repro.analysis [--json X] [--strict]``):
   collectives inside ``nosync`` schedules.
 - ``contracts`` — registry-metadata vocabulary plus AST verification that
   ``handle_dangling`` flows from each variant's ``run`` into its sweep.
+- ``markers`` — pytest tier-marker audit over ``tests/`` + ``pytest.ini``
+  (unregistered marks, unmarked subprocess tests, subprocess ⊆ slow,
+  conftest-owned ``tier1``).
 
 Findings are ``(pass, target, check)`` triples; the documented suppression
 list in :mod:`repro.analysis.findings` marks reviewed, by-design findings
@@ -36,8 +39,9 @@ def run_all() -> list[Finding]:
     never need)."""
     from repro.analysis.contracts import contract_findings
     from repro.analysis.jaxpr_lint import jaxpr_findings, serving_findings
+    from repro.analysis.markers import marker_findings
     from repro.analysis.vmem import vmem_findings
 
     findings = [*vmem_findings(), *jaxpr_findings(), *serving_findings(),
-                *contract_findings()]
+                *contract_findings(), *marker_findings()]
     return apply_suppressions(findings)

@@ -1,7 +1,7 @@
 """CLI for the static-analysis passes.
 
     PYTHONPATH=src python -m repro.analysis [--json ANALYSIS.json] [--strict]
-                                            [--pass vmem|jaxpr|contracts]
+                                            [--pass vmem|jaxpr|contracts|markers]
                                             [--write-docs-table]
 
 Prints every finding (suppressed ones with their documented reason — they
@@ -39,21 +39,38 @@ def _collect(passes: set[str]):
         from repro.analysis.contracts import contract_findings
 
         findings.extend(contract_findings())
+    if "markers" in passes:
+        from repro.analysis.markers import marker_findings
+
+        findings.extend(marker_findings())
     return apply_suppressions(findings), kernel_reports
 
 
-def _rewrite_docs_table(path: pathlib.Path) -> int:
-    from repro.analysis.vmem import DOCS_BEGIN, DOCS_END, kernels_markdown
-
+def _rewrite_one(path: pathlib.Path, begin: str, end: str,
+                 generate, what: str) -> int:
     text = path.read_text()
-    if DOCS_BEGIN not in text or DOCS_END not in text:
+    if begin not in text or end not in text:
         print(f"{path}: generated-table markers not found", file=sys.stderr)
         return 1
-    head, rest = text.split(DOCS_BEGIN, 1)
-    _, tail = rest.split(DOCS_END, 1)
-    path.write_text(head + kernels_markdown() + tail)
-    print(f"rewrote VMEM table in {path}")
+    head, rest = text.split(begin, 1)
+    _, tail = rest.split(end, 1)
+    path.write_text(head + generate() + tail)
+    print(f"rewrote {what} in {path}")
     return 0
+
+
+def _rewrite_docs_tables(root: pathlib.Path) -> int:
+    from repro.analysis.contracts import (
+        SCHED_DOCS_BEGIN, SCHED_DOCS_END, scheduling_markdown,
+    )
+    from repro.analysis.vmem import DOCS_BEGIN, DOCS_END, kernels_markdown
+
+    rc = _rewrite_one(root / "docs" / "KERNELS.md", DOCS_BEGIN, DOCS_END,
+                      kernels_markdown, "VMEM table")
+    rc |= _rewrite_one(root / "docs" / "SCHEDULING.md",
+                       SCHED_DOCS_BEGIN, SCHED_DOCS_END,
+                       scheduling_markdown, "registry schedule table")
+    return rc
 
 
 def main(argv=None) -> int:
@@ -66,17 +83,19 @@ def main(argv=None) -> int:
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 if any unsuppressed finding remains")
     ap.add_argument("--pass", dest="passes", action="append",
-                    choices=("vmem", "jaxpr", "contracts"), default=None,
-                    help="run only the named pass(es); default: all three")
+                    choices=("vmem", "jaxpr", "contracts", "markers"),
+                    default=None,
+                    help="run only the named pass(es); default: all four")
     ap.add_argument("--write-docs-table", action="store_true",
-                    help="rewrite the generated VMEM table in docs/KERNELS.md")
+                    help="rewrite the generated tables in docs/KERNELS.md "
+                         "(VMEM) and docs/SCHEDULING.md (registry schedules)")
     args = ap.parse_args(argv)
 
     if args.write_docs_table:
         root = pathlib.Path(__file__).resolve().parents[3]
-        return _rewrite_docs_table(root / "docs" / "KERNELS.md")
+        return _rewrite_docs_tables(root)
 
-    passes = set(args.passes or ("vmem", "jaxpr", "contracts"))
+    passes = set(args.passes or ("vmem", "jaxpr", "contracts", "markers"))
     findings, kernel_reports = _collect(passes)
 
     for name, rep in kernel_reports.items():

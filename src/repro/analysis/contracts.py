@@ -192,3 +192,35 @@ def audit_registry() -> dict[str, list[Finding]]:
 
 def contract_findings() -> list[Finding]:
     return [f for fs in audit_registry().values() for f in fs]
+
+
+# ---------------------------------------------------------------------------
+# Generated docs table (docs/SCHEDULING.md embeds this between markers)
+# ---------------------------------------------------------------------------
+
+SCHED_DOCS_BEGIN = ("<!-- generated by `python -m repro.analysis` "
+                    "(registry schedule table): begin -->")
+SCHED_DOCS_END = ("<!-- generated by `python -m repro.analysis` "
+                  "(registry schedule table): end -->")
+
+
+def scheduling_markdown() -> str:
+    """The variant/schedule table docs/SCHEDULING.md embeds — regenerated
+    straight from the live registry (``python -m repro.analysis
+    --write-docs-table`` rewrites it in place; ``scripts/docs_check.py``
+    diffs it), so a new variant or a schedule reclassification cannot leave
+    the scheduling docs stale."""
+    from repro.core.solver import get_variant, list_variants
+
+    lines = [
+        SCHED_DOCS_BEGIN,
+        "",
+        "| variant | schedule | backend | layout | description |",
+        "|---|---|---|---|---|",
+    ]
+    for name in list_variants():
+        v = get_variant(name)
+        lines.append(f"| `{name}` | {v.schedule} | {v.backend} | "
+                     f"{v.layout} | {v.description} |")
+    lines += ["", SCHED_DOCS_END]
+    return "\n".join(lines)

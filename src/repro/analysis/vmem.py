@@ -468,7 +468,8 @@ def variant_vmem(variant, *, block: int = 256, cap: int = 1024,
         return None
     if variant.name.startswith("ppr"):
         kernel = "spmv_gs_pass_multi"
-    elif variant.schedule == "nosync":
+    elif variant.schedule in ("nosync", "adaptive"):
+        # the adaptive schedule drives the same GS pass, block-frozen
         kernel = "spmv_gs_pass"
     else:
         kernel = "spmv_blocked"

@@ -23,6 +23,11 @@ Variant map (paper §4 → registry name → composition):
                           independent).  ``thread_level`` termination per
                           Alg 3 l.17-19 is the schedule's observed-error skip.
 * ``nosync_opt``        — Alg 3 + Alg 5 perforation transform.
+* ``nosync_adaptive``   — Alg 3 on the residual-adaptive schedule: partitions
+                          swept in descending residual order, partitions whose
+                          certified residual bound is at or below tolerance
+                          skipped outright (staleness kept sound by the
+                          cross-partition gain matrix — docs/SCHEDULING.md).
 * ``pallas``/``pallas_nosync``/``pallas_nosync_opt`` — the blocked Pallas
                           SpMV sweep on either schedule (plus the perforated
                           fresh-read form); registered from
@@ -61,6 +66,7 @@ import numpy as np
 from repro.core.solver import (
     DEFAULT_DAMPING,
     PageRankResult,
+    adaptive_schedule,
     barrier_schedule,
     nosync_schedule,
     perforation,
@@ -84,7 +90,10 @@ __all__ = [
     "pagerank_barrier_edge",
     "pagerank_barrier_opt",
     "pagerank_nosync",
+    "pagerank_nosync_adaptive",
     "pagerank_identical",
+    "partition_gain_matrix",
+    "vertex_gain_matrix",
 ]
 
 
@@ -162,6 +171,77 @@ class EdgeCentricGraph:
         )
 
 
+def partition_gain_matrix(g: Graph, unit: int, p: int) -> np.ndarray:
+    """Cross-unit max-norm gain matrix of one PageRank sweep,
+
+        G[i, j] = max_{v in unit i}  Σ_{u in unit j, (u,v) ∈ E}  w_uv/outdeg_u ,
+
+    for the contiguous unit layout ``unit i = vertices [i·unit, (i+1)·unit)``
+    (partitions of :class:`PartitionedGraph`, dst blocks of the Pallas
+    layout).  This is the static certificate behind the adaptive schedules:
+    if every rank in unit ``j`` moved by at most ``Δ_j`` this round, a fresh
+    sweep of unit ``i`` can move any of its ranks by at most
+    ``d·Σ_j G[i,j]·Δ_j`` — so a skipped unit's residual bound inflated by
+    that amount stays a true bound (``repro.core.solver.adaptive_schedule``).
+    Callers add the dangling-redistribution term (``|dangling ∩ j|/n`` per
+    column) when running with ``handle_dangling``.
+
+    Host-side, O(m log m), float64 accumulation; dense ``(p, p)`` output —
+    fine for thread-scale ``p``, quadratic in block count for the blocked
+    layout (which is why the Pallas build computes it only on request).
+    """
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst).astype(np.int64)
+    out_degree = np.asarray(g.out_degree)
+    inv_out = np.where(out_degree > 0, 1.0 / np.maximum(out_degree, 1), 0.0)
+    vals = inv_out[src]
+    if g.weights is not None:
+        vals = vals * np.asarray(g.weights)
+    gain = np.zeros((p, p), dtype=np.float64)
+    if src.size:
+        # per-(dst vertex, src unit) sums, then a max-reduce over each
+        # dst unit's vertices
+        keys = dst * p + (src.astype(np.int64) // unit)
+        uniq, inv_idx = np.unique(keys, return_inverse=True)
+        sums = np.bincount(inv_idx, weights=np.abs(vals), minlength=uniq.size)
+        np.maximum.at(gain, ((uniq // p) // unit, uniq % p), sums)
+    return gain
+
+
+def vertex_gain_matrix(g: Graph, unit: int, p: int, n_pad: int) -> np.ndarray:
+    """Per-**vertex** cross-unit gain operator of one PageRank sweep,
+
+        S[v, j] = Σ_{u in unit j, (u,v) ∈ E}  |w_uv|/outdeg_u ,
+
+    shape ``(n_pad, p)`` — the row-resolved refinement of
+    :func:`partition_gain_matrix` (which max-reduces S's rows over each dst
+    unit).  The adaptive schedule carries a per-vertex residual bound and
+    inflates it by ``d·S@Δ``; the partition skip decision then takes the max
+    over member rows *after* accumulation, which is much tighter than
+    inflating with the pre-maxed ``(p, p)`` certificate: one hub vertex in a
+    partition no longer forces the whole partition's bound to absorb every
+    neighbour's delta.  In the prototype this is the difference between
+    breaking even with nosync and 25–45% fewer sweeps.
+
+    Dense ``(n_pad, p)`` float64 host-side — linear in ``n·p``, which is
+    fine at thread-scale ``p`` but is exactly why the blocked Pallas layout
+    (``p`` = thousands of blocks) sticks with the ``(p, p)`` certificate.
+    Callers add the dangling-redistribution term (``|dangling ∩ j|/n`` per
+    column) when running with ``handle_dangling``.
+    """
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    out_degree = np.asarray(g.out_degree)
+    inv_out = np.where(out_degree > 0, 1.0 / np.maximum(out_degree, 1), 0.0)
+    vals = inv_out[src]
+    if g.weights is not None:
+        vals = vals * np.asarray(g.weights)
+    s = np.zeros((n_pad, p), dtype=np.float64)
+    if src.size:
+        np.add.at(s, (dst, src // unit), np.abs(vals))
+    return s
+
+
 @dataclasses.dataclass
 class PartitionedGraph:
     """Static vertex partitions with padded per-partition edge lists.
@@ -183,6 +263,7 @@ class PartitionedGraph:
     dangling: jax.Array  # (n_pad,)
     w_pad: jax.Array | None = None  # (p, cap) per-edge weight (0 = padding)
     bias_pad: jax.Array | None = None  # (n_pad,) base multiplier (0 padding)
+    gain: jax.Array | None = None  # (n_pad, p) per-vertex sweep gain
 
     @property
     def edge_mult(self) -> jax.Array:
@@ -228,6 +309,11 @@ class PartitionedGraph:
             w_pad=None if w_pad is None else jnp.asarray(w_pad, dtype=dtype),
             bias_pad=(None if bias_pad is None
                       else jnp.asarray(bias_pad, dtype=dtype)),
+            # p is thread-scale, so the (n_pad, p) vertex-gain certificate
+            # costs about one extra rank-vector per partition — cheap enough
+            # to always carry, so every partitioned bundle can run the
+            # adaptive schedule without a rebuild
+            gain=jnp.asarray(vertex_gain_matrix(g, vp, p, n_pad), dtype=dtype),
         )
 
 
@@ -453,7 +539,7 @@ def _nosync_impl(
     pr0 = jnp.full((n_pad,), 1.0 / n, dtype) if warm is None else warm
     r = solve(step, pr0, n_units=p, threshold=threshold, max_iter=max_iter,
               track_frozen=perforate)
-    return PageRankResult(r.pr[:n], r.iterations, r.err, r.residuals)
+    return PageRankResult(r.pr[:n], r.iterations, r.err, r.residuals, r.sweeps)
 
 
 def pagerank_nosync(
@@ -479,6 +565,88 @@ def pagerank_nosync(
         n=pg.n, p=pg.p, vp=pg.vp, n_pad=pg.n_pad,
         d=d, threshold=threshold, max_iter=max_iter,
         perforate=perforate, thread_level=thread_level,
+        handle_dangling=handle_dangling,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Residual-adaptive No-Sync (descending-residual order + certified skipping)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "p", "vp", "n_pad", "max_iter", "handle_dangling"),
+)
+def _nosync_adaptive_impl(
+    src_pad, dst_local, emask, inv_out, dangling, bias_pad, gain, warm,
+    *, n, p, vp, n_pad, d, threshold, max_iter, handle_dangling,
+):
+    dtype = inv_out.dtype
+    base = jnp.asarray((1.0 - d) / n, dtype)
+
+    def sweep(i, pr, dmass):
+        srcs = jax.lax.dynamic_slice_in_dim(src_pad, i, 1, 0)[0]
+        dsts = jax.lax.dynamic_slice_in_dim(dst_local, i, 1, 0)[0]
+        msk = jax.lax.dynamic_slice_in_dim(emask, i, 1, 0)[0]
+        contrib = (pr * inv_out)[srcs] * msk
+        acc = jax.ops.segment_sum(contrib, dsts, num_segments=vp, indices_are_sorted=True)
+        if bias_pad is None:
+            return base + d * acc + dmass
+        b_i = jax.lax.dynamic_slice_in_dim(bias_pad, i * vp, vp, 0)
+        return base * b_i + d * acc + dmass
+
+    def dangling_mass(pr):
+        if handle_dangling:
+            return d * jnp.sum(pr * dangling) / n
+        return jnp.asarray(0.0, dtype)
+
+    gain_eff = gain
+    if handle_dangling:
+        # a unit Δ in partition j also moves the redistributed dangling mass
+        # by ≤ d·|dangling ∩ j|·Δ/n, uniformly across every vertex
+        dang_counts = dangling.reshape(p, vp).sum(axis=1)
+        gain_eff = gain + (dang_counts / n)[None, :]
+
+    step = adaptive_schedule(
+        sweep, p=p, vp=vp, threshold=threshold, d=d, gain=gain_eff,
+        prologue=dangling_mass,
+    )
+    pr0 = jnp.full((n_pad,), 1.0 / n, dtype) if warm is None else warm
+    r = solve(step, pr0, n_units=p, threshold=threshold, max_iter=max_iter,
+              aux0=jnp.full((n_pad,), jnp.inf, dtype))
+    return PageRankResult(r.pr[:n], r.iterations, r.err, r.residuals, r.sweeps)
+
+
+def pagerank_nosync_adaptive(
+    pg: PartitionedGraph,
+    d: float = DEFAULT_DAMPING,
+    threshold: float = 1e-8,
+    max_iter: int = 10_000,
+    handle_dangling: bool = False,
+    pr0=None,
+) -> PageRankResult:
+    """Alg-3 partition sweeps on the residual-adaptive schedule: partitions
+    swept in descending residual-bound order, partitions whose certified
+    per-vertex bound sits at or below the fair-share cut skipped outright
+    (see :func:`repro.core.solver.adaptive_schedule`).  Same fixed point as
+    ``nosync``; strictly less work on graphs whose partitions converge at
+    uneven rates — the regression tier in tests/test_adaptive.py asserts the
+    sweep-count win."""
+    if pg.gain is None:
+        raise ValueError(
+            "PartitionedGraph bundle lacks the gain matrix required by the "
+            "adaptive schedule (rebuild with PartitionedGraph.from_graph)")
+    warm = None
+    if pr0 is not None:
+        padded = np.zeros(pg.n_pad, dtype=np.float64)
+        padded[:pg.n] = np.asarray(pr0)
+        warm = jnp.asarray(padded, pg.inv_out.dtype)
+    return _nosync_adaptive_impl(
+        pg.src_pad, pg.dst_local, pg.edge_mult, pg.inv_out, pg.dangling,
+        pg.bias_pad, pg.gain, warm,
+        n=pg.n, p=pg.p, vp=pg.vp, n_pad=pg.n_pad,
+        d=d, threshold=threshold, max_iter=max_iter,
         handle_dangling=handle_dangling,
     )
 
@@ -636,6 +804,13 @@ register_variant(
     description="Alg 3: barrier-free fresh-read partition sweeps",
     options=("thread_level",),
     layout="partitioned", backend="jax", schedule="nosync",
+)
+register_variant(
+    "nosync_adaptive",
+    build=lambda g, threads=56, **_: PartitionedGraph.from_graph(g, p=threads),
+    run=lambda b, **kw: pagerank_nosync_adaptive(b, **_run_kw(kw)),
+    description="Alg 3 + residual-adaptive order and certified partition skipping",
+    layout="partitioned", backend="jax", schedule="adaptive",
 )
 register_variant(
     "nosync_opt",

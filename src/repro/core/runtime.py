@@ -188,6 +188,9 @@ def simulate_jittered(
     seed: int = 0,
     sigma: float = 0.3,
     rel_costs: Optional[np.ndarray] = None,
+    active=None,
+    stall_prob: float = 0.0,
+    stall_dur: float = 0.0,
 ) -> float:
     """Makespan (seconds) of ``iterations`` rounds under lognormal per-sweep
     jitter — the cost model behind the Fig 1–4 speedup reproduction.
@@ -201,8 +204,29 @@ def simulate_jittered(
     * barrier    — round time = max over workers (the barrier waits).
     * nosync     — each worker's clock advances independently; makespan =
                    max total per-worker time (no per-round max).
+    * adaptive   — nosync clocking, but a worker only pays for rounds in
+                   which its partition actually swept (the residual-adaptive
+                   schedule's certified skipping); ``active`` supplies the
+                   sweep mask.
     * waitfree   — like barrier but load-balanced via helping: round time =
                    mean over workers (idle helpers absorb the tail).
+
+    ``active`` is either an ``(iterations, p)`` bool mask (a replay of which
+    partitions swept each round — derive it from a solve's telemetry) or a
+    scalar sweep *rate* in (0, 1] (a synthetic replay at the measured
+    ``sweeps/(iterations·p)`` activity, Bernoulli-sampled per round/worker).
+    It is honoured by ``sequential``/``nosync``/``adaptive`` (skipped sweeps
+    cost nothing) and ignored by the barrier disciplines, which sweep
+    everyone by construction.
+
+    ``stall_prob``/``stall_dur`` model the **delayed/stale-sweep regime**
+    (Blanco et al.'s delayed asynchronous iteration): each executed sweep
+    independently suffers an exogenous stall of ``stall_dur`` mean-sweep
+    units with probability ``stall_prob`` (an OS hiccup, a slow fetch, a
+    straggling replica).  Under a barrier every stall extends the whole
+    round; under nosync it delays only its own worker; under adaptive a
+    skipped sweep cannot stall at all — which is exactly the makespan gap
+    the stale-sweep replays in ``bench_variants --json`` record.
     """
     rng = np.random.default_rng(seed)
     p = pg.p
@@ -212,12 +236,27 @@ def simulate_jittered(
         if rel.shape != (p,):
             raise ValueError(f"rel_costs shape {rel.shape} != ({p},)")
         costs = costs * (rel * p / max(float(rel.sum()), 1e-300))[None, :]
+    if stall_prob > 0.0:
+        costs = costs + stall_dur * (
+            rng.random(size=(iterations, p)) < stall_prob)
+    mask = np.ones((iterations, p), dtype=bool)
+    if active is not None:
+        if np.ndim(active) == 0:
+            rate = float(active)
+            if not 0.0 < rate <= 1.0:
+                raise ValueError(f"active rate must be in (0, 1], got {rate}")
+            mask = rng.random(size=(iterations, p)) < rate
+        else:
+            mask = np.asarray(active, dtype=bool)
+            if mask.shape != (iterations, p):
+                raise ValueError(
+                    f"active mask shape {mask.shape} != ({iterations}, {p})")
     if discipline == "sequential":
-        return float(costs.sum())
+        return float((costs * mask).sum())
     if discipline == "barrier":
         return float(costs.max(axis=1).sum())
-    if discipline == "nosync":
-        return float(costs.sum(axis=0).max())
+    if discipline in ("nosync", "adaptive"):
+        return float((costs * mask).sum(axis=0).max())
     if discipline == "waitfree":
         return float(np.maximum(costs.mean(axis=1), costs.min(axis=1)).sum())
     raise ValueError(discipline)

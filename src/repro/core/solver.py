@@ -46,13 +46,21 @@ class PageRankResult(NamedTuple):
     :func:`solve` (an ``inf``-padded ``(max_iter,)`` buffer — slice it with
     ``residuals[:iterations]`` host-side); solvers that own their loop (the
     ``shard_map`` distributed modes, the numpy oracle, the push solver) leave
-    it ``None``.
+    it ``None``.  ``sweeps`` counts **executed schedule-unit updates** — the
+    work metric the adaptive schedules optimize (a skipped partition/block
+    costs no sweep): ``iterations`` for the single-unit barrier schedules,
+    at most ``iterations · p`` for the partitioned ones; ``None`` for the
+    loop-owning solvers — except the push solvers, which report their push
+    count here (a push *is* their schedule unit) while leaving ``residuals``
+    ``None``.  tests/test_adaptive.py pins this ownership contract for every
+    registry variant.
     """
 
     pr: jax.Array
     iterations: jax.Array
     err: jax.Array
     residuals: Any = None
+    sweeps: Any = None
 
 
 class EngineState(NamedTuple):
@@ -61,13 +69,22 @@ class EngineState(NamedTuple):
     ``pr`` may be any layout (flat vector, padded vector, blocked 2-D) — the
     engine never indexes it, only the schedule's step function does.  ``perr``
     holds the last *observed* error per schedule unit (1 for barrier, p for
-    no-sync partitions); the stop rule reduces over it.
+    no-sync partitions); for units an adaptive schedule skipped it holds the
+    pre-round certified residual bound instead (at or below the skip cut by
+    construction, so it never blocks the stop rule).  The stop rule reduces
+    over it either way.  ``sweeps`` counts executed unit updates (engine
+    telemetry every schedule maintains).  ``aux`` is schedule-owned carried
+    state the engine never touches — the adaptive schedules keep their
+    staleness-inflated residual-bound vector here; every other schedule
+    leaves it the empty-pytree default.
     """
 
     pr: jax.Array
     frozen: jax.Array  # same shape as pr — perforation freeze mask
-    perr: jax.Array  # (n_units,) last observed per-unit error
+    perr: jax.Array  # (n_units,) last observed per-unit error / bound
     it: jax.Array  # int32 iteration counter
+    sweeps: jax.Array  # int32 executed schedule-unit updates
+    aux: Any = ()  # schedule-owned carried state (empty for most schedules)
 
 
 # A transform post-processes one proposed update: (old, new, frozen) ->
@@ -138,7 +155,8 @@ def barrier_schedule(sweep: Callable[..., jax.Array],
         new = sweep(state.pr, state.frozen) if pass_frozen else sweep(state.pr)
         new, frozen = _apply_transforms(transforms, state.pr, new, state.frozen)
         err = jnp.max(jnp.abs(new - state.pr))
-        return EngineState(new, frozen, jnp.full_like(state.perr, err), state.it + 1)
+        return EngineState(new, frozen, jnp.full_like(state.perr, err),
+                           state.it + 1, state.sweeps + 1)
 
     return step
 
@@ -173,7 +191,7 @@ def batched_barrier_schedule(
         else:
             err = jnp.max(jnp.abs(new - state.pr),
                           axis=tuple(range(1, new.ndim)))
-        return EngineState(new, frozen, err, state.it + 1)
+        return EngineState(new, frozen, err, state.it + 1, state.sweeps + 1)
 
     return step
 
@@ -218,7 +236,7 @@ def nosync_schedule(
 
         def sweep_partition(i, carry):
             def do(carry):
-                pr, frozen, perr = carry
+                pr, frozen, perr, nsw = carry
                 ax = pr.ndim - 1  # partitions live on the last axis
                 old = jax.lax.dynamic_slice_in_dim(pr, i * vp, vp, axis=ax)
                 new = sweep(i, pr) if prologue is None else sweep(i, pr, ctx)
@@ -229,17 +247,183 @@ def nosync_schedule(
                         frozen, fr, i * vp, ax)
                 pr = jax.lax.dynamic_update_slice_in_dim(pr, new, i * vp, ax)
                 perr = perr.at[i].set(jnp.max(jnp.abs(new - old)))
-                return pr, frozen, perr
+                return pr, frozen, perr, nsw + 1
 
             if thread_level:
-                _, _, perr = carry
+                _, _, perr, _ = carry
                 return jax.lax.cond(jnp.max(perr) > threshold, do, lambda c: c, carry)
             return do(carry)
 
-        pr, frozen, perr = jax.lax.fori_loop(
-            0, p, sweep_partition, (state.pr, state.frozen, state.perr)
+        pr, frozen, perr, sweeps = jax.lax.fori_loop(
+            0, p, sweep_partition,
+            (state.pr, state.frozen, state.perr, state.sweeps)
         )
-        return EngineState(pr, frozen, perr, state.it + 1)
+        return EngineState(pr, frozen, perr, state.it + 1, sweeps)
+
+    return step
+
+
+def adaptive_schedule(
+    sweep: Callable[..., jax.Array],
+    *,
+    p: int,
+    vp: int,
+    threshold: float,
+    d: float,
+    gain: jax.Array,
+    prologue: Callable[[jax.Array], Any] | None = None,
+) -> Callable:
+    """Residual-adaptive No-Sync: the Kollias/Blanco "choose work by
+    residual" refinement of :func:`nosync_schedule` (PAPERS.md — asynchronous
+    iterative PageRank / delayed asynchronous iteration).
+
+    Two changes over plain No-Sync, both decided **per partition inside the
+    schedule** (coarse perforation at partition granularity, not the per-
+    vertex Alg-5 transform):
+
+    * **ordering** — partitions are swept in *descending residual-bound*
+      order each round (``argsort(-bound)``), so the freshest reads flow from
+      the partitions that moved most into the ones that depend on them;
+    * **skipping** — a partition whose certified residual bound is at or
+      below its fair share of the tolerance — ``threshold / 2``, splitting
+      the max-norm budget evenly between the swept partitions' observed
+      errors and the skipped partitions' certified drift — is not swept at
+      all this round: it sheds the whole sweep, not just the tail of the
+      final iteration like ``thread_level``.
+
+    Skipping on the *local observed* error alone converges to a wrong fixed
+    point (the nosync docstring's No-Sync-Edge §4.4 phenomenon: a skipped
+    partition whose inputs keep moving freezes stale).  What makes the skip
+    sound here is a carried certified **bound**, not a stale observation:
+    the schedule owns a per-row bound vector (``EngineState.aux``) that is
+    reset to the observed delta when a row's partition sweeps and inflated
+    by the worst-case influence of every applied update when it skips,
+
+        bound[v] ← [v swept ? 0 : bound[v]] + d · Σ_j gain[v, j] · maxΔ_j ,
+
+    where ``gain[v, j] ≥ Σ_{u∈j, u→v} w_uv/outdeg_u`` is the static
+    cross-partition gain operator (see
+    ``repro.core.pagerank.vertex_gain_matrix``; callers fold the dangling
+    redistribution term in) and ``maxΔ_j`` the max-abs update partition
+    ``j`` applied this round.  ``gain`` rows may be per **vertex** (shape
+    ``(n_pad, p)`` — tightest, used by the partitioned jax variant) or per
+    **partition** (shape ``(p, p)`` with a max over member vertices baked
+    in — the Pallas block layout); the partition skip bound is the max of
+    its rows' bounds either way.  Since one sweep of a row changes it by at
+    most ``d·Σ_j gain[v,j]·‖Δ_j‖_∞``, a partition whose bound is at or
+    below the cut genuinely cannot have moved past it — skipping is exact,
+    and a partition whose neighbours keep pushing mass at it is re-swept
+    the moment its bound crosses the cut.
+
+    The **stop rule is untouched**: ``perr`` is set to the observed delta
+    for swept partitions and to the *pre-inflation* bound (≤ cut <
+    threshold by construction) for skipped ones, so ``max(perr) ≤
+    threshold`` fires exactly when every swept partition observes
+    convergence and every skipped one is certified inside its fair share —
+    at least as strong a certificate as nosync's, for the same fixed point
+    (Lemma 2).  Keeping the *inflated* bound out of ``perr`` is what makes
+    this competitive: an earlier design that stopped on the inflated bound
+    had to drive the global deltas ``1/(d·‖gain‖)`` below threshold first,
+    costing more iterations than it saved sweeps.
+
+    ``sweep``/``prologue`` contracts are exactly :func:`nosync_schedule`'s.
+    Transforms are not composed here — partition-level skipping *is* this
+    schedule's perforation.  Pass ``aux0=jnp.full((gain.shape[0],), inf)``
+    to :func:`solve` (the ``inf`` sentinel makes round one sweep everyone).
+    """
+    gain = jnp.asarray(gain)
+    rows = gain.shape[0]  # n_pad (vertex-granular) or p (partition-granular)
+
+    def partition_bound(bound):
+        return bound if rows == p else jnp.max(bound.reshape(p, vp), axis=1)
+
+    def step(state: EngineState) -> EngineState:
+        ctx = prologue(state.pr) if prologue is not None else None
+        bound = state.aux  # (rows,) certified residual bound, inf at start
+        pbound = partition_bound(bound)
+        # Skip set fixed at round start: a sweep only lowers its own bound,
+        # so in-round recomputation could not activate anyone new.
+        cut = jnp.asarray(threshold / 2, pbound.dtype)
+        active = pbound > cut
+        order = jnp.argsort(-pbound)  # descending residual bound
+        deltas0 = jnp.zeros((p,), state.pr.dtype)
+
+        def sweep_position(k, carry):
+            i = order[k]
+
+            def do(carry):
+                pr, deltas, nsw = carry
+                ax = pr.ndim - 1  # partitions live on the last axis
+                old = jax.lax.dynamic_slice_in_dim(pr, i * vp, vp, axis=ax)
+                new = sweep(i, pr) if prologue is None else sweep(i, pr, ctx)
+                pr = jax.lax.dynamic_update_slice_in_dim(pr, new, i * vp, ax)
+                delta = jnp.max(jnp.abs(new - old))
+                return pr, deltas.at[i].set(delta), nsw + 1
+
+            return jax.lax.cond(active[i], do, lambda c: c, carry)
+
+        pr, deltas, sweeps = jax.lax.fori_loop(
+            0, p, sweep_position, (state.pr, deltas0, state.sweeps)
+        )
+        # Swept rows restart their bound from zero (their residual was just
+        # realized as this round's delta); skipped rows keep drifting.  The
+        # inf sentinel clears on round one because everyone is active.
+        active_rows = active if rows == p else jnp.repeat(active, vp)
+        bound = jnp.where(active_rows, jnp.zeros_like(bound), bound)
+        bound = bound + jnp.asarray(d, bound.dtype) * (gain @ deltas)
+        # Stop-visible error: observed delta when swept, certified
+        # PRE-inflation bound (≤ cut) when skipped — never the inflated one.
+        perr = jnp.where(active, deltas, pbound)
+        return EngineState(pr, state.frozen, perr, state.it + 1, sweeps,
+                           bound)
+
+    return step
+
+
+def freeze_adaptive_schedule(
+    sweep: Callable[..., jax.Array],
+    *,
+    threshold: float,
+    d: float,
+    gain: jax.Array,
+) -> Callable:
+    """Residual-adaptive scheduling for sweeps that take a **freeze mask**
+    instead of a partition index — the blocked Pallas Gauss–Seidel pass,
+    whose tile walk is baked into the kernel grid and cannot be reordered.
+
+    Each unit is one row of the rank layout (a dst block).  Blocks whose
+    certified residual bound is at or below the fair-share cut
+    (``threshold / 2``) are frozen for the whole pass (the kernel holds
+    their ranks, sheds their tiles' update) and unfrozen the moment
+    neighbour updates inflate their bound past the cut — the same
+    split-bound staleness model as :func:`adaptive_schedule` (carried bound
+    in ``aux``, stop-visible ``perr`` holds observed deltas / pre-inflation
+    bounds), with ``gain`` at block granularity
+    (``partition_gain_matrix``).  The kernel's tile walk is baked into its
+    grid, so there is no residual ordering here — skipping is the whole
+    play.  ``sweep(pr, frozen)`` must respect the mask exactly
+    (``spmv_gs_pass``'s contract: frozen rows keep their input values,
+    in-pass fresh reads included).  Pass ``aux0=jnp.full((n_blocks,),
+    inf)`` to :func:`solve`.
+    """
+    gain = jnp.asarray(gain)
+
+    def step(state: EngineState) -> EngineState:
+        bound = state.aux  # (n_units,) certified bound, inf at start
+        cut = jnp.asarray(threshold / 2, bound.dtype)
+        active = bound > cut  # (n_units,) = (rows of pr,)
+        frozen_mask = jnp.broadcast_to(
+            (~active)[:, None], state.pr.shape).astype(state.pr.dtype)
+        new = sweep(state.pr, frozen_mask)
+        err = jnp.max(jnp.abs(new - state.pr),
+                      axis=tuple(range(1, new.ndim)))
+        deltas = jnp.where(active, err, jnp.zeros_like(err))
+        new_bound = jnp.where(active, jnp.zeros_like(bound), bound)
+        new_bound = new_bound + jnp.asarray(d, bound.dtype) * (gain @ deltas)
+        perr = jnp.where(active, err, bound)  # pre-inflation bound ≤ cut
+        sweeps = state.sweeps + jnp.sum(active.astype(jnp.int32))
+        return EngineState(new, state.frozen, perr, state.it + 1, sweeps,
+                           new_bound)
 
     return step
 
@@ -257,6 +441,7 @@ def solve(
     threshold: float,
     max_iter: int,
     track_frozen: bool = False,
+    aux0: Any = (),
 ) -> PageRankResult:
     """Iterate ``step`` until every observed unit error is at or below
     ``threshold`` (or ``max_iter``).  Returns the rank array in the solver's
@@ -264,7 +449,9 @@ def solve(
 
     ``track_frozen`` allocates the perforation freeze mask; leave it off for
     transform-free variants so the while-loop carry holds a zero-size stub
-    instead of a full-size boolean array.
+    instead of a full-size boolean array.  ``aux0`` seeds the schedule-owned
+    ``EngineState.aux`` slot (the adaptive schedules' carried bound vector);
+    the empty-pytree default costs nothing for every other schedule.
 
     The engine also records the **residual trajectory**: the max observed
     unit error after each iteration, in an ``inf``-padded ``(max_iter,)``
@@ -289,10 +476,13 @@ def solve(
         frozen=jnp.zeros(pr0.shape if track_frozen else (0,), jnp.bool_),
         perr=jnp.full((n_units,), jnp.inf, dtype),
         it=jnp.asarray(0, jnp.int32),
+        sweeps=jnp.asarray(0, jnp.int32),
+        aux=aux0,
     )
     errs0 = jnp.full((max_iter,), jnp.inf, jnp.float32)
     final, errs = jax.lax.while_loop(cond, body, (init, errs0))
-    return PageRankResult(final.pr, final.it, jnp.max(final.perr), errs)
+    return PageRankResult(final.pr, final.it, jnp.max(final.perr), errs,
+                          final.sweeps)
 
 
 # ---------------------------------------------------------------------------
@@ -325,7 +515,9 @@ class Variant:
       interpreted off-TPU, and benchmarks flag that), ``"shard_map"``
       (device-mesh collectives).
     * ``schedule`` — coordination discipline for the runtime cost model:
-      ``"barrier"``, ``"nosync"`` (fresh/stale reads, no global barrier), or
+      ``"barrier"``, ``"nosync"`` (fresh/stale reads, no global barrier),
+      ``"adaptive"`` (nosync clocking + residual-ordered sweeps and
+      certified per-unit skipping — see :func:`adaptive_schedule`), or
       ``"sequential"``.
     """
 
@@ -345,7 +537,7 @@ _REGISTRY: dict[str, Variant] = {}
 # :class:`Variant`); ``register_variant`` enforces them at import time and
 # ``repro.analysis.contracts`` re-audits the registry against the same sets.
 BACKENDS = frozenset({"numpy", "jax", "pallas", "shard_map"})
-SCHEDULES = frozenset({"barrier", "nosync", "sequential"})
+SCHEDULES = frozenset({"barrier", "nosync", "adaptive", "sequential"})
 
 # Options the launcher/benchmarks pass uniformly; variants that don't need
 # one ignore it (e.g. --threads with a barrier variant, --local-sweeps with
@@ -632,6 +824,7 @@ def plan_run(
                           build_opts=b.build_opts, plan_opts=plan_opts)
     if b.bundle is None:  # fully-pruned graph: reconstruction does it all
         it, err, residuals = np.asarray(0, np.int32), np.asarray(0.0), None
+        sweeps = None
         core_pr = np.zeros(0, dtype=np.float64)
     else:
         if pr0 is not None:
@@ -643,10 +836,10 @@ def plan_run(
             opts = dict(opts, pr0=pr0[b.plan.core_index] * (b.plan.n / core_n))
         r = b.inner.run(b.bundle, d=d, threshold=threshold, max_iter=max_iter,
                         handle_dangling=False, **opts)
-        it, err, residuals = r.iterations, r.err, r.residuals
+        it, err, residuals, sweeps = r.iterations, r.err, r.residuals, r.sweeps
         core_pr = np.asarray(r.pr, dtype=np.float64)
     pr = b.plan.reconstruct(core_pr, d=d, handle_dangling=handle_dangling)
-    return PageRankResult(pr, it, err, residuals)
+    return PageRankResult(pr, it, err, residuals, sweeps)
 
 
 def plan_stats(bundle) -> dict | None:

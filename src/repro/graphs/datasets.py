@@ -53,6 +53,11 @@ DATASETS = {
     "greatbritainosm": DatasetSpec("greatbritainosm", 7_700_000, 8_200_000, "road"),
     "asiaosm": DatasetSpec("asiaosm", 12_000_000, 12_700_000, "road"),
     "germanyosm": DatasetSpec("germanyosm", 11_500_000, 12_400_000, "road"),
+    # Heavy-skew R-MAT (a=0.7): not a Table-1 dataset — the convergence-
+    # regression fixture of the residual-adaptive tier (tests/test_adaptive
+    # .py and the BENCH_variants sweep records), kept here so test and bench
+    # instantiate the identical graph
+    "rmatSkew": DatasetSpec("rmatSkew", 262_144, 2_097_152, "skewed"),
     # Synthetic D10..D70 [22]
     "D10": DatasetSpec("D10", 491_550, 999_999, "synthetic"),
     "D20": DatasetSpec("D20", 954_225, 1_999_999, "synthetic"),
@@ -125,6 +130,8 @@ def _dataset_rmat_params(
         abc = (0.30, 0.25, 0.25)  # near-uniform, low skew
     elif spec.family == "web":
         abc = (0.60, 0.19, 0.19)
+    elif spec.family == "skewed":
+        abc = (0.70, 0.10, 0.10)  # heavy hub skew (adaptive-tier fixture)
     else:
         abc = (0.57, 0.19, 0.19)
     return n, m, abc

@@ -17,6 +17,14 @@ unchanged.
 the engine's ``perforation`` transform owns the freeze mask, and the kernel
 receives it as an extra VMEM operand so in-pass fresh reads see frozen
 vertices at their frozen values.
+
+``schedule="adaptive"`` reuses the same freeze-mask operand for
+residual-adaptive **block skipping**: dst blocks whose certified residual
+bound sits at or below the fair-share cut are frozen for the whole pass
+(:func:`repro.core.solver.freeze_adaptive_schedule`), driven by the
+``(n_blocks, n_blocks)`` gain certificate the build computes on request
+(``gain=True`` — dense in block count, so only the ``pallas_adaptive``
+registration pays for it).
 """
 from __future__ import annotations
 
@@ -31,6 +39,7 @@ from repro.core.solver import (
     DEFAULT_DAMPING,
     PageRankResult,
     barrier_schedule,
+    freeze_adaptive_schedule,
     perforation,
     register_variant,
     solve,
@@ -38,7 +47,7 @@ from repro.core.solver import (
 from repro.graphs.csr import Graph, build_blocked_coo, inv_out_and_dangling
 from repro.kernels.spmv.kernel import spmv_blocked, spmv_gs_pass
 
-SCHEDULES = ("barrier", "nosync")
+SCHEDULES = ("barrier", "nosync", "adaptive")
 
 
 class PallasGraph(NamedTuple):
@@ -60,9 +69,11 @@ class PallasGraph(NamedTuple):
     dangling_blocks: jax.Array  # (n_blocks, block) — outdeg==0 mask, padded 0
     tiles_weight: jax.Array | None = None  # (T, cap) per-edge weights
     bias_blocks: jax.Array | None = None  # (n_blocks, block) base multiplier
+    gain: jax.Array | None = None  # (n_blocks, n_blocks) cross-block gain
 
     @classmethod
-    def build(cls, g: Graph, block: int = 256, tile_cap: int = 1024) -> "PallasGraph":
+    def build(cls, g: Graph, block: int = 256, tile_cap: int = 1024,
+              gain: bool = False) -> "PallasGraph":
         b = build_blocked_coo(g, block=block, tile_cap=tile_cap)
         n_pad = b.n_blocks * block
         inv, dang = inv_out_and_dangling(g.out_degree, n_pad)
@@ -73,6 +84,14 @@ class PallasGraph(NamedTuple):
             bias = np.zeros(n_pad, dtype=np.float32)
             bias[:g.n] = g.bias
             bias_blocks = jnp.asarray(bias.reshape(b.n_blocks, block))
+        gain_mat = None
+        if gain:
+            # dense (n_blocks, n_blocks) — quadratic in block count, so the
+            # certificate is opt-in rather than a tax on every blocked build
+            from repro.core.pagerank import partition_gain_matrix
+
+            gain_mat = jnp.asarray(
+                partition_gain_matrix(g, block, b.n_blocks), jnp.float32)
         return cls(
             n=g.n,
             block=block,
@@ -87,6 +106,7 @@ class PallasGraph(NamedTuple):
             tiles_weight=(None if b.tiles_weight is None
                           else jnp.asarray(b.tiles_weight)),
             bias_blocks=bias_blocks,
+            gain=gain_mat,
         )
 
 
@@ -98,7 +118,7 @@ class PallasGraph(NamedTuple):
 def _pallas_impl(
     tiles_src_local, tiles_dst_local, tiles_valid, tile_src_block,
     tile_dst_block, inv_out_blocks, dangling_blocks, tiles_weight, bias_blocks,
-    warm,
+    gain, warm,
     *, n, block, n_blocks, d, threshold, max_iter, schedule, handle_dangling,
     interpret, perforate,
 ):
@@ -128,7 +148,7 @@ def _pallas_impl(
             )
             return (base * bz + d * acc + d * dangling_mass(pr)) * vmask
 
-    else:  # nosync: one blocked Gauss–Seidel pass per engine iteration
+    else:  # nosync/adaptive: one blocked Gauss–Seidel pass per iteration
 
         def sweep(pr, frozen=None):
             params = jnp.stack(
@@ -147,16 +167,33 @@ def _pallas_impl(
                 tile_src_block, tile_dst_block, block=block, interpret=interpret,
             )
 
+    # warm start rides in blocked layout, already vmask-ed by the wrapper
+    pr0 = (jnp.full((n_blocks, block), 1.0 / n, jnp.float32) * vmask
+           if warm is None else warm)
+    if schedule == "adaptive":
+        # block-level residual-adaptive skipping: the freeze mask that Alg-5
+        # perforation feeds per-vertex is driven per dst block here, from the
+        # certified (n_blocks, n_blocks) gain bound (one engine unit = one
+        # block row, so the stop rule sees per-block observed deltas)
+        gain_eff = gain
+        if handle_dangling:
+            dang_counts = jnp.sum(dangling_blocks, axis=1)
+            gain_eff = gain + (dang_counts / n)[None, :]
+        step = freeze_adaptive_schedule(
+            sweep, threshold=threshold, d=d, gain=gain_eff)
+        r = solve(step, pr0, n_units=n_blocks, threshold=threshold,
+                  max_iter=max_iter,
+                  aux0=jnp.full((n_blocks,), jnp.inf, jnp.float32))
+        return PageRankResult(r.pr.reshape(-1)[:n], r.iterations, r.err,
+                              r.residuals, r.sweeps)
     # Perforation is the ENGINE's transform (Alg 5), not a kernel fork: the
     # kernel only respects the mask the transform maintains.
     transforms = (perforation(threshold),) if perforate else ()
     step = barrier_schedule(sweep, transforms, pass_frozen=perforate)
-    # warm start rides in blocked layout, already vmask-ed by the wrapper
-    pr0 = (jnp.full((n_blocks, block), 1.0 / n, jnp.float32) * vmask
-           if warm is None else warm)
     r = solve(step, pr0, threshold=threshold, max_iter=max_iter,
               track_frozen=perforate)
-    return PageRankResult(r.pr.reshape(-1)[:n], r.iterations, r.err, r.residuals)
+    return PageRankResult(r.pr.reshape(-1)[:n], r.iterations, r.err,
+                          r.residuals, r.sweeps)
 
 
 def pagerank_pallas(
@@ -178,7 +215,12 @@ def pagerank_pallas(
         raise ValueError(f"schedule must be one of {SCHEDULES}, got {schedule!r}")
     if perforate and schedule != "nosync":
         raise ValueError("perforate requires the nosync schedule "
-                         "(the freeze mask is a spmv_gs_pass operand)")
+                         "(the freeze mask is a spmv_gs_pass operand; the "
+                         "adaptive schedule owns the mask itself)")
+    if schedule == "adaptive" and pg.gain is None:
+        raise ValueError(
+            "adaptive schedule needs the block gain certificate — rebuild "
+            "with PallasGraph.build(g, gain=True)")
     if pg.n == 0:
         return PageRankResult(jnp.zeros((0,), jnp.float32),
                               jnp.asarray(0, jnp.int32),
@@ -191,7 +233,7 @@ def pagerank_pallas(
     return _pallas_impl(
         pg.tiles_src_local, pg.tiles_dst_local, pg.tiles_valid,
         pg.tile_src_block, pg.tile_dst_block, pg.inv_out_blocks,
-        pg.dangling_blocks, pg.tiles_weight, pg.bias_blocks, warm,
+        pg.dangling_blocks, pg.tiles_weight, pg.bias_blocks, pg.gain, warm,
         n=pg.n, block=pg.block, n_blocks=pg.n_blocks,
         d=d, threshold=threshold, max_iter=max_iter, schedule=schedule,
         handle_dangling=handle_dangling, interpret=interpret,
@@ -204,8 +246,8 @@ def pagerank_pallas(
 # ---------------------------------------------------------------------------
 
 
-def _build(g, block: int = 256, tile_cap: int = 1024, **_):
-    return PallasGraph.build(g, block=block, tile_cap=tile_cap)
+def _build(g, block: int = 256, tile_cap: int = 1024, gain: bool = False, **_):
+    return PallasGraph.build(g, block=block, tile_cap=tile_cap, gain=gain)
 
 
 def _run(schedule, perforate=False):
@@ -234,4 +276,12 @@ register_variant(
     "pallas_nosync_opt", build=_build, run=_run("nosync", perforate=True),
     description="blocked MXU SpMV kernel, Alg-3 fresh-read schedule + Alg-5 perforation",
     layout="blocked", backend="pallas", schedule="nosync",
+)
+register_variant(
+    "pallas_adaptive",
+    # private layout on purpose: the "blocked" bundle benchmarks share lacks
+    # the gain certificate this schedule requires
+    build=functools.partial(_build, gain=True), run=_run("adaptive"),
+    description="blocked MXU SpMV kernel, residual-adaptive certified block skipping",
+    layout="blocked_gain", backend="pallas", schedule="adaptive",
 )

@@ -274,7 +274,8 @@ def _ppr_nosync_impl(
     step = nosync_schedule(sweep, p=p, vp=vp, threshold=threshold,
                            thread_level=thread_level, prologue=dangling_mass)
     r = solve(step, tele, n_units=p, threshold=threshold, max_iter=max_iter)
-    return PageRankResult(r.pr[:, :n], r.iterations, r.err, r.residuals)
+    return PageRankResult(r.pr[:, :n], r.iterations, r.err, r.residuals,
+                          r.sweeps)
 
 
 def ppr_nosync(
@@ -387,7 +388,7 @@ def _ppr_pallas_impl(
     r = solve(step, tele_blocks, n_units=b, threshold=threshold,
               max_iter=max_iter, track_frozen=True)
     pr = r.pr.transpose(1, 0, 2).reshape(b, n_pad)[:, :n]
-    return PageRankResult(pr, r.iterations, r.err, r.residuals)
+    return PageRankResult(pr, r.iterations, r.err, r.residuals, r.sweeps)
 
 
 def blocked_rows(rows: np.ndarray, n_blocks: int, block: int) -> np.ndarray:

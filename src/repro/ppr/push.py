@@ -21,6 +21,14 @@ round's frontier is whatever rose above ``rmax`` — vectorized over the
 frontier with the same concatenated-CSR-range trick the decomposition
 analyses use.  Work is local: a push touches only the out-edges of frontier
 vertices, so a single-seed query on a massive graph never scans the graph.
+
+``priority=True`` swaps the FIFO for a **max-residual frontier**
+(:class:`BucketQueue`): each round pushes only the vertices in the highest
+power-of-two residual bucket, so heavy-tailed graphs stop wasting rounds
+draining tiny residuals alongside the hubs that keep regenerating them.
+Any drain order preserves the ``est + Σ r_v·ppr(e_v)`` invariant (it is
+linear algebra, order-free), so priority mode changes work order and push
+counts, never the certificate.
 """
 from __future__ import annotations
 
@@ -31,7 +39,65 @@ import numpy as np
 from repro.core.solver import DEFAULT_DAMPING, PageRankResult, register_variant
 from repro.graphs.csr import Graph, _concat_ranges
 
-__all__ = ["PushResult", "ppr_push", "push_residual", "topk"]
+__all__ = ["BucketQueue", "PushResult", "ppr_push", "push_residual", "topk"]
+
+
+class BucketQueue:
+    """Bucketed max-priority queue over residual magnitudes.
+
+    Priorities are bucketed by power-of-two multiples of ``rmax``: bucket
+    ``k`` holds values in ``(rmax·2^k, rmax·2^{k+1}]`` (everything at or
+    below ``rmax`` lands in bucket 0, everything above the top bucket's
+    floor is clamped into it), so :meth:`pop_batch` returns vertices whose
+    insert-time priority is within a factor of two of the queue's maximum —
+    the classic approximate-max frontier (Berkhin's bookkeeping for push
+    methods), O(1) per operation with ``n_buckets`` of constant overhead.
+
+    Entries are **lazy**: re-pushing a vertex with a new priority leaves the
+    old entry in place, and a popped batch is de-duplicated but *not*
+    revalidated — callers re-check current residuals against the threshold
+    (:func:`push_residual` does), which is what makes the queue correct
+    under the scatter-driven priority churn of a push solve.
+    """
+
+    def __init__(self, rmax: float, n_buckets: int = 64):
+        if not rmax > 0:
+            raise ValueError(f"rmax must be positive, got {rmax}")
+        self.rmax = float(rmax)
+        self.n_buckets = int(n_buckets)
+        self._buckets: list[list] = [[] for _ in range(self.n_buckets)]
+        self._hi = -1  # index of the highest possibly-non-empty bucket
+
+    def bucket_of(self, value: float) -> int:
+        """Bucket index of one priority value (scalar or array)."""
+        with np.errstate(divide="ignore"):
+            k = np.floor(np.log2(np.maximum(
+                np.abs(value), 1e-300) / self.rmax)).astype(np.int64)
+        return np.clip(k, 0, self.n_buckets - 1)
+
+    def push(self, vertices, values) -> None:
+        """Insert vertices with priorities ``values`` (arrays or scalars)."""
+        vertices = np.atleast_1d(np.asarray(vertices))
+        if vertices.size == 0:
+            return
+        ks = np.atleast_1d(self.bucket_of(values))
+        for k in np.unique(ks):
+            self._buckets[k].append(vertices[ks == k])
+            self._hi = max(self._hi, int(k))
+
+    def pop_batch(self) -> np.ndarray:
+        """Vertices of the highest non-empty bucket (deduplicated, sorted);
+        empty array when the queue is drained."""
+        while self._hi >= 0 and not self._buckets[self._hi]:
+            self._hi -= 1
+        if self._hi < 0:
+            return np.zeros(0, np.int64)
+        batch = np.concatenate(self._buckets[self._hi])
+        self._buckets[self._hi] = []
+        return np.unique(batch)
+
+    def __len__(self) -> int:
+        return sum(sum(a.size for a in b) for b in self._buckets)
 
 
 def topk(est: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
@@ -77,6 +143,7 @@ def push_residual(
     handle_dangling: bool = False,
     max_rounds: int = 10_000,
     touched: np.ndarray | None = None,
+    priority: bool = False,
 ) -> tuple[int, int]:
     """Drain residual mass from ``r`` into ``est`` **in place**; returns
     ``(rounds, pushes)``.
@@ -94,6 +161,13 @@ def push_residual(
 
     ``touched``, when given, is an ``(n,)`` bool mask OR-accumulated with
     every vertex pushed or scattered into — the repair-locality metric.
+
+    ``priority=True`` drains by **descending residual bucket** instead of
+    FIFO rounds: each round pushes the :class:`BucketQueue`'s top bucket
+    (max residual up to the factor-2 bucket width), re-enqueuing scatter
+    targets that rose above ``rmax``.  Same invariant, same ``rmax`` exit
+    condition; a round is one popped batch, so round counts are not
+    comparable across modes (the push count is).
     """
     bank = (1.0 - d) if bank is None else bank
     out_ptr, out_dst, out_slot = g.out_csr()
@@ -102,9 +176,13 @@ def push_residual(
     dangling = outdeg == 0
     pushes = 0
     rounds = 0
-    frontier = np.flatnonzero((np.abs(r) if signed else r) > rmax)
-    while frontier.size and rounds < max_rounds:
-        rounds += 1
+
+    def magnitude(idx):
+        return np.abs(r[idx]) if signed else r[idx]
+
+    def push_batch(frontier):
+        """Push every frontier vertex once; returns the scatter targets."""
+        nonlocal pushes
         pushes += int(frontier.size)
         if touched is not None:
             touched[frontier] = True
@@ -112,6 +190,7 @@ def push_residual(
         r[frontier] = 0.0  # zero BEFORE scatter so self-loops accumulate
         est[frontier] += bank * moved
         live = ~dangling[frontier]
+        scattered = np.zeros(0, out_dst.dtype)
         if live.any():
             fl = frontier[live]
             deg = outdeg[fl]
@@ -120,13 +199,49 @@ def push_residual(
             if w_out is not None:
                 vals = vals * w_out[eidx]
             np.add.at(r, out_dst[eidx], vals)
+            scattered = out_dst[eidx]
             if touched is not None:
-                touched[out_dst[eidx]] = True
+                touched[scattered] = True
         if handle_dangling:
             dang_mass = d * float(moved[~live].sum())
             if dang_mass != 0.0:
-                r += dang_mass * teleport  # re-teleport onto the seed dist
+                # re-teleport onto the seed dist (in place: r is a closure)
+                r[...] += dang_mass * teleport
+                scattered = np.concatenate(
+                    [scattered, np.flatnonzero(teleport)])
+        return scattered
+
+    if not priority:
         frontier = np.flatnonzero((np.abs(r) if signed else r) > rmax)
+        while frontier.size and rounds < max_rounds:
+            rounds += 1
+            push_batch(frontier)
+            frontier = np.flatnonzero((np.abs(r) if signed else r) > rmax)
+        return rounds, pushes
+
+    q = BucketQueue(rmax)
+    init = np.flatnonzero((np.abs(r) if signed else r) > rmax)
+    q.push(init, magnitude(init))
+    while rounds < max_rounds:
+        batch = q.pop_batch()
+        if batch.size == 0:
+            # lazy entries mean an empty queue is a *candidate* exit: one
+            # full recheck either confirms convergence or refills the queue
+            left = np.flatnonzero((np.abs(r) if signed else r) > rmax)
+            if left.size == 0:
+                break
+            q.push(left, magnitude(left))
+            continue
+        batch = batch[magnitude(batch) > rmax]  # drop stale entries
+        if batch.size == 0:
+            continue
+        rounds += 1
+        scattered = push_batch(batch)
+        if scattered.size:
+            uniq = np.unique(scattered)
+            mag = magnitude(uniq)
+            risen = mag > rmax
+            q.push(uniq[risen], mag[risen])
     return rounds, pushes
 
 
@@ -138,9 +253,13 @@ def ppr_push(
     rmax: float = 1e-8,
     handle_dangling: bool = False,
     max_rounds: int = 10_000,
+    priority: bool = False,
 ) -> PushResult:
     """Forward push from ``seeds`` (int, iterable of ints, or empty/None for
     a uniform global query) until every residual is at or below ``rmax``.
+    ``priority=True`` drains the max-residual bucket first (see
+    :func:`push_residual`) — fewer pushes on heavy-tailed residual
+    distributions, identical certificate.
 
     One seed set per call — a batched (nested) spec raises rather than
     silently answering only its first row; batches go through the
@@ -167,7 +286,8 @@ def ppr_push(
         return PushResult(est=est, resid=r, rounds=0, pushes=0)
     rounds, pushes = push_residual(
         g, est, r, d=d, rmax=rmax, bank=1.0 - d, signed=False, teleport=t,
-        handle_dangling=handle_dangling, max_rounds=max_rounds)
+        handle_dangling=handle_dangling, max_rounds=max_rounds,
+        priority=priority)
     return PushResult(est=est, resid=r, rounds=rounds, pushes=pushes)
 
 
@@ -176,33 +296,49 @@ def ppr_push(
 # ---------------------------------------------------------------------------
 
 
-def _push_run(g: Graph, *, d=DEFAULT_DAMPING, threshold=1e-8, max_iter=10_000,
-              handle_dangling=False, seeds=None, rmax=None, **_):
-    """Registry run fn: one push solve per seed row, stacked to ``(b, n)``.
+def _push_run(priority=False):
+    def run(g: Graph, *, d=DEFAULT_DAMPING, threshold=1e-8, max_iter=10_000,
+            handle_dangling=False, seeds=None, rmax=None, **_):
+        """Registry run fn: one push solve per seed row, stacked to
+        ``(b, n)``.
 
-    ``rmax`` defaults to the engine ``threshold`` so the generic round-trip
-    tests drive the push certificate to the same tolerance as the iterative
-    variants (L1 bound ≤ n·rmax)."""
-    from repro.ppr.batched import normalize_seeds
+        ``rmax`` defaults to the engine ``threshold`` so the generic
+        round-trip tests drive the push certificate to the same tolerance as
+        the iterative variants (L1 bound ≤ n·rmax)."""
+        from repro.ppr.batched import normalize_seeds
 
-    rmax = threshold if rmax is None else rmax
-    rows = normalize_seeds(seeds)
-    ests, rounds, bound = [], 0, 0.0
-    for row in rows:
-        res = ppr_push(g, row, d=d, rmax=rmax,
-                       handle_dangling=handle_dangling, max_rounds=max_iter)
-        ests.append(res.est)
-        rounds = max(rounds, res.rounds)
-        bound = max(bound, res.l1_bound)
-    return PageRankResult(np.stack(ests), np.asarray(rounds, np.int32),
-                          np.asarray(bound))
+        rmax_eff = threshold if rmax is None else rmax
+        rows = normalize_seeds(seeds)
+        ests, rounds, bound, pushes = [], 0, 0.0, 0
+        for row in rows:
+            res = ppr_push(g, row, d=d, rmax=rmax_eff,
+                           handle_dangling=handle_dangling,
+                           max_rounds=max_iter, priority=priority)
+            ests.append(res.est)
+            rounds = max(rounds, res.rounds)
+            bound = max(bound, res.l1_bound)
+            pushes += res.pushes
+        # pushes ride the sweeps slot: both count executed per-unit updates
+        return PageRankResult(np.stack(ests), np.asarray(rounds, np.int32),
+                              np.asarray(bound), None,
+                              np.asarray(pushes, np.int32))
+
+    return run
 
 
 register_variant(
     "ppr_push",
     build=lambda g, **_: g,
-    run=_push_run,
+    run=_push_run(),
     description="forward-push local PPR: residual certificate + sparse top-k",
     options=("seeds", "rmax"),
     layout="host", backend="numpy", schedule="sequential",
+)
+register_variant(
+    "ppr_push_priority",
+    build=lambda g, **_: g,
+    run=_push_run(priority=True),
+    description="forward-push local PPR, max-residual bucket-queue frontier",
+    options=("seeds", "rmax"),
+    layout="host", backend="numpy", schedule="adaptive",
 )

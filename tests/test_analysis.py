@@ -270,6 +270,59 @@ def test_registry_metadata_still_validated():
 # ---------------------------------------------------------------------------
 
 
+def test_markers_pass_clean_on_repo():
+    from repro.analysis.markers import marker_findings, registered_markers
+
+    assert {"tier1", "slow", "subprocess"} <= registered_markers()
+    assert marker_findings() == [], \
+        [f.to_dict() for f in marker_findings()]
+
+
+def test_markers_pass_flags_violations(tmp_path):
+    from repro.analysis.markers import marker_findings
+
+    (tmp_path / "pytest.ini").write_text(
+        "[pytest]\nmarkers =\n    tier1: gate\n    slow: slow tier\n"
+        "    subprocess: spawns workers\n")
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    (tests / "test_bad.py").write_text(
+        "import subprocess\n"
+        "import pytest\n"
+        "import sys\n"
+        "@pytest.mark.tier1\n"          # conftest owns tier1
+        "@pytest.mark.sloow\n"          # typo'd, unregistered
+        "def test_a():\n"
+        "    subprocess.run([sys.executable, '-V'])\n"  # unmarked spawn
+        "@pytest.mark.subprocess\n"     # subprocess without slow
+        "def test_b():\n"
+        "    pass\n")
+    checks = {f.check for f in marker_findings(tmp_path)}
+    assert checks == {"unregistered-marker", "explicit-tier1",
+                      "unmarked-subprocess", "subprocess-not-slow"}
+    # a missing pytest.ini is itself a finding, not a crash
+    (tmp_path / "pytest.ini").unlink()
+    assert "missing-config" in {f.check for f in marker_findings(tmp_path)}
+
+
+def test_markers_module_pytestmark_counts(tmp_path):
+    from repro.analysis.markers import marker_findings
+
+    (tmp_path / "pytest.ini").write_text(
+        "[pytest]\nmarkers =\n    tier1: a\n    slow: b\n    subprocess: c\n")
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    # module-level pytestmark satisfies both the spawn rule and slow⊆rule
+    (tests / "test_mod.py").write_text(
+        "import subprocess\n"
+        "import pytest\n"
+        "import sys\n"
+        "pytestmark = [pytest.mark.slow, pytest.mark.subprocess]\n"
+        "def test_a():\n"
+        "    subprocess.run([sys.executable, '-V'])\n")
+    assert marker_findings(tmp_path) == []
+
+
 def test_full_registry_runs_clean_and_suppressions_fire():
     from repro.analysis import run_all
 

@@ -102,6 +102,8 @@ _DIST_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_distributed_pagerank_8way():
     env = dict(os.environ, PYTHONPATH="src")
     res = subprocess.run(
@@ -216,6 +218,7 @@ def test_edge_balanced_boundaries_fix_load_skew():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_local_sgd_trains_and_syncs():
     import dataclasses as dc
 

@@ -94,7 +94,9 @@ def test_collective_parser():
 
 
 def test_dataset_registry_mirrors_table1():
-    assert len(DATASETS) == 19  # 4 web + 4 social + 4 road + 7 synthetic
+    # 4 web + 4 social + 4 road + 7 synthetic + the rmatSkew adaptive fixture
+    assert len(DATASETS) == 20
+    assert DATASETS["rmatSkew"].family == "skewed"
     g = make_dataset("webStanford", scale_down=512)
     assert g.n >= 64 and g.m >= 128
     g2 = make_dataset("roaditalyosm", scale_down=4096)

@@ -270,6 +270,8 @@ _MESH_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_mesh8_sharded_matches_single_device():
     env = dict(os.environ, PYTHONPATH="src")
     res = subprocess.run(

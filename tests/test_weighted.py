@@ -128,7 +128,8 @@ def test_weighted_dangling_round_trip():
     `base/(base − (d/n)·Σ_dang pr)`, not plain normalisation."""
     g = random_weighted_graph(seed=7, biased=False)
     ref, _ = pagerank_numpy(g, threshold=1e-13, handle_dangling=True)
-    for vname in ("barrier", "nosync", "pallas_nosync", "distributed_barrier",
+    for vname in ("barrier", "nosync", "nosync_adaptive", "pallas_nosync",
+                  "pallas_adaptive", "distributed_barrier",
                   "barrier_sticd", "nosync_sticd"):
         r = solve_variant(vname, g, threshold=THRESH, handle_dangling=True,
                           **OPTS)
@@ -276,6 +277,32 @@ def test_biased_graph_rejects_closed_form_dangling():
         pytest.skip("plan pruned nothing on this surrogate")
     with pytest.raises(ValueError, match="uniform"):
         plan.reconstruct(np.zeros(plan.core.n), handle_dangling=True)
+
+
+def test_adaptive_variants_solve_sticd_core():
+    """The residual-adaptive variants consume the decomposition's output
+    representation natively: the contracted core (d^k edge weights +
+    folded teleport bias) solved by every adaptive/priority variant matches
+    the core's own float64 oracle — the weighted/biased × sticd-plan leg of
+    the adaptive differential matrix."""
+    base_g = chains_across_partitions_graph(seed=21)
+    rng = np.random.default_rng(3)
+    g = Graph.from_edges(
+        base_g.n, base_g.src, base_g.dst,
+        weights=rng.uniform(0.3, 1.0, base_g.m),
+        bias=rng.uniform(0.5, 1.5, base_g.n),
+    )
+    plan = DecompositionPlan.from_graph(g)
+    core = plan.core
+    assert plan.contracted_m > 0 and core.weights is not None
+    assert core.bias is not None
+    ref, _ = pagerank_numpy(core, threshold=1e-13)
+    for vname in ("nosync_adaptive", "pallas_adaptive", "ppr_push_priority"):
+        r = solve_variant(vname, core, threshold=THRESH, **OPTS)
+        pr = np.asarray(r.pr, np.float64)
+        if pr.ndim == 2:  # the priority push answers the biased global query
+            pr = pr[0]
+        assert l1_norm(pr, ref) < 1e-6, vname
 
 
 def test_sticd_on_weighted_input_graph():
